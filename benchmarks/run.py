@@ -1,0 +1,50 @@
+"""Benchmark harness: one function per paper table (see tables.py).
+
+    PYTHONPATH=src python -m benchmarks.run [--only table4_er] [--full]
+
+Prints ``name,us_per_call,derived`` CSV summary lines at the end, plus
+per-table detail while running. Full CSVs + .meta.json sidecars are
+written to results/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    sys.path.insert(0, "src")
+    from benchmarks.tables import ALL_TABLES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated table names")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-size graphs (slow on CPU)")
+    args = ap.parse_args(argv)
+
+    names = list(ALL_TABLES) if not args.only else args.only.split(",")
+    summary = []
+    for name in names:
+        fn = ALL_TABLES[name]
+        print(f"[bench] {name}")
+        t0 = time.perf_counter()
+        rows = fn(full=args.full)
+        dt = (time.perf_counter() - t0) * 1e6
+        derived = ""
+        try:
+            # headline derived metric: max speedup in the table
+            sp = [r[-1] for r in rows if isinstance(r[-1], (int, float))]
+            if sp:
+                derived = f"max_speedup={max(sp):.3f}"
+        except Exception:
+            pass
+        summary.append((name, dt / max(len(rows), 1), derived))
+    print("\nname,us_per_call,derived")
+    for name, us, derived in summary:
+        print(f"{name},{us:.0f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

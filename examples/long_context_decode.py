@@ -1,0 +1,48 @@
+"""Long-context decode via the paper's CSR attention (window + sinks).
+
+    PYTHONPATH=src python examples/long_context_decode.py
+
+Demonstrates the long_500k serving path at small scale: a reduced dense
+LM decodes against a KV cache using the banded CSR pattern
+(sliding_window_csr) instead of full attention — O(window) per token.
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduced
+from repro.models import api
+
+
+def main():
+    cfg = reduced(get_config("qwen3_14b"))  # long_window=64, long_sinks=8
+    params = api.init_model(cfg, jax.random.PRNGKey(0), jnp.float32)
+    B, prompt, gen = 2, 48, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, prompt), 0, cfg.vocab)
+    cache = api.init_cache(cfg, B, prompt + gen, jnp.float32)
+    logits, cache = api.prefill(params, {"tokens": toks}, cfg, cache)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None]
+
+    decode = jax.jit(
+        lambda p, t, c: api.decode_step(p, t, cfg, c, long_ctx=True),
+        donate_argnums=(2,),
+    )
+    t0 = time.time()
+    outs = [tok]
+    for _ in range(gen - 1):
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        outs.append(tok)
+    jax.block_until_ready(tok)
+    print(f"decoded {gen} tokens through CSR window+sink attention "
+          f"({(time.time()-t0)/gen*1e3:.1f} ms/tok, window={cfg.long_window}, "
+          f"sinks={cfg.long_sinks})")
+    print("generated:", jnp.concatenate(outs, 1)[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

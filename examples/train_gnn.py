@@ -1,0 +1,61 @@
+"""End-to-end GNN training on a synthetic Reddit-shaped graph — the
+paper's own workload, with AutoSAGE-scheduled aggregation.
+
+    PYTHONPATH=src python examples/train_gnn.py [--epochs 30]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import AutoSage, ScheduleCache
+from repro.models.gnn import init_gnn, sage_forward
+from repro.sparse import reddit_like
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=30)
+    ap.add_argument("--scale", type=float, default=0.01)
+    args = ap.parse_args()
+
+    cfg = get_config("gnn_sage")
+    graph = reddit_like(scale=args.scale)
+    n, classes, in_dim = graph.n_rows, 16, 64
+    rng = np.random.default_rng(0)
+    # synthetic node features + labels with graph-correlated signal
+    feats = rng.standard_normal((n, in_dim)).astype(np.float32)
+    labels = (feats[:, 0] * 3 + rng.standard_normal(n) * 0.3)
+    labels = np.digitize(labels, np.quantile(labels, np.linspace(0, 1, classes + 1)[1:-1])).astype(np.int32)
+
+    sage = AutoSage(cache=ScheduleCache(path=None))
+    params = init_gnn(cfg, jax.random.PRNGKey(0), in_dim, classes)
+    x = jnp.asarray(feats)
+    y = jnp.asarray(labels)
+
+    def loss_fn(p):
+        logits = sage_forward(p, graph, x)  # AutoSAGE inside would re-probe
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, y[:, None], 1).mean()
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    lr = 0.05
+    t0 = time.time()
+    for epoch in range(args.epochs):
+        loss, g = grad_fn(params)
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+        if epoch % 5 == 0 or epoch == args.epochs - 1:
+            print(f"epoch {epoch:3d} loss {float(loss):.4f} ({time.time()-t0:.1f}s)")
+    # show what the scheduler picks for this graph at this width
+    d = sage.decide(graph, cfg.d_model, "spmm")
+    print(f"scheduler choice for aggregation at F={cfg.d_model}: {d.choice}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Fault-tolerant checkpointing.
+
+Layout: <dir>/step_<n>/
+  arrays.npz      flattened pytree leaves, keyed by path string
+  manifest.json   tree structure, shapes/dtypes, pipeline state, mesh info
+  COMMITTED       marker written last (atomic rename) — a crash mid-write
+                  leaves no COMMITTED marker, so restore skips the partial
+                  checkpoint and falls back to the previous one.
+
+Elastic restore: arrays are saved unsharded (single-host container); on
+load they are device_put with the *current* mesh's shardings, so resuming
+onto a different device count / mesh shape (elastic scaling) is just
+`restore(dir, shardings=new_shardings)`.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(tree: Any, ckpt_dir: str, step: int, extra: Optional[Dict] = None) -> str:
+    """Atomic checkpoint write; returns the committed directory."""
+    base = Path(ckpt_dir)
+    base.mkdir(parents=True, exist_ok=True)
+    final = base / f"step_{step:08d}"
+    tmp = Path(tempfile.mkdtemp(dir=base, prefix=".tmp_"))
+    try:
+        arrays = _flatten(tree)
+        np.savez(tmp / "arrays.npz", **arrays)
+        treedef = jax.tree.structure(tree)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "keys": sorted(arrays.keys()),
+            "shapes": {k: list(v.shape) for k, v in arrays.items()},
+            "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+            "extra": extra or {},
+        }
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f, indent=1)
+        (tmp / "COMMITTED").touch()
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return str(final)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    base = Path(ckpt_dir)
+    if not base.exists():
+        return None
+    steps = []
+    for d in base.iterdir():
+        if d.name.startswith("step_") and (d / "COMMITTED").exists():
+            steps.append(int(d.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(
+    tree_like: Any,
+    ckpt_dir: str,
+    step: Optional[int] = None,
+    shardings: Optional[Any] = None,
+) -> Tuple[Any, Dict]:
+    """Restore into the structure of `tree_like` (shape/dtype template).
+
+    `shardings`: optional pytree of (Named)Shardings for elastic restore
+    onto the current mesh.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    with open(d / "manifest.json") as f:
+        manifest = json.load(f)
+    data = np.load(d / "arrays.npz")
+
+    flat_t = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    shard_leaves = (
+        jax.tree.leaves(shardings) if shardings is not None else None
+    )
+    for i, (path, leaf) in enumerate(flat_t[0]):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = data[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        arr = arr.astype(leaf.dtype)
+        if shard_leaves is not None:
+            arr = jax.device_put(arr, shard_leaves[i])
+        leaves.append(arr)
+    tree = jax.tree.unflatten(flat_t[1], leaves)
+    return tree, manifest["extra"]
+
+
+def prune_old(ckpt_dir: str, keep: int = 3) -> None:
+    base = Path(ckpt_dir)
+    if not base.exists():
+        return
+    steps = sorted(
+        d for d in base.iterdir()
+        if d.name.startswith("step_") and (d / "COMMITTED").exists()
+    )
+    for d in steps[:-keep]:
+        shutil.rmtree(d, ignore_errors=True)

@@ -1,0 +1,10 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    ArchConfig,
+    ShapeCfg,
+    get_config,
+    reduced,
+)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ArchConfig", "ShapeCfg", "get_config", "reduced"]

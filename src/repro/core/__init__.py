@@ -1,0 +1,22 @@
+"""AutoSAGE core: input-aware kernel scheduling (the paper's contribution).
+
+Pipeline: features -> roofline estimate shortlist -> on-device micro-probe
+on an induced subgraph -> guardrail (never regress, Prop. 1) -> persistent
+cache with deterministic replay.
+"""
+from repro.core.features import HardwareSpec, InputFeatures, device_sig
+from repro.core.scheduler import AutoSage, Decision
+from repro.core.cache import ScheduleCache, ReplayMiss
+from repro.core.guardrail import apply_guardrail, GuardrailDecision
+
+__all__ = [
+    "AutoSage",
+    "Decision",
+    "HardwareSpec",
+    "InputFeatures",
+    "ScheduleCache",
+    "ReplayMiss",
+    "apply_guardrail",
+    "GuardrailDecision",
+    "device_sig",
+]

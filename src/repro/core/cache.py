@@ -1,0 +1,75 @@
+"""Persistent schedule cache with deterministic replay (paper §4.2, §10).
+
+Keyed by (device_sig, graph_sig, F, op, alpha) — the paper's
+"(device, graph signature, F, op)" plus the guardrail setting, since a
+different alpha can change the decision. JSON on disk, atomic writes.
+`replay_only` mode never probes: a cache miss raises, guaranteeing
+bit-identical schedule choices across runs (AUTOSAGE_REPLAY_ONLY=1).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+DEFAULT_PATH = os.environ.get("AUTOSAGE_CACHE", "autosage_cache.json")
+
+
+class ReplayMiss(RuntimeError):
+    pass
+
+
+class ScheduleCache:
+    def __init__(
+        self,
+        path: Optional[str] = DEFAULT_PATH,
+        replay_only: Optional[bool] = None,
+    ):
+        self.path = Path(path) if path else None
+        if replay_only is None:
+            replay_only = os.environ.get("AUTOSAGE_REPLAY_ONLY") == "1"
+        self.replay_only = replay_only
+        self._lock = threading.Lock()
+        self._data: Dict[str, Dict[str, Any]] = {}
+        if self.path and self.path.exists():
+            with open(self.path) as f:
+                self._data = json.load(f)
+
+    @staticmethod
+    def key(device_sig: str, graph_sig: str, f: int, op: str, alpha: float) -> str:
+        return f"{device_sig}|{graph_sig}|F={f}|{op}|a={alpha}"
+
+    def contains(self, key: str) -> bool:
+        return key in self._data
+
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        entry = self._data.get(key)
+        if entry is None and self.replay_only:
+            raise ReplayMiss(
+                f"AUTOSAGE_REPLAY_ONLY=1 but no cached schedule for {key}"
+            )
+        return entry
+
+    def put(self, key: str, entry: Dict[str, Any]) -> None:
+        if self.replay_only:
+            raise ReplayMiss("cannot write cache in replay-only mode")
+        with self._lock:
+            self._data[key] = entry
+            self._flush()
+
+    def _flush(self) -> None:
+        if not self.path:
+            return
+        # atomic rename so a crash never corrupts the cache
+        fd, tmp = tempfile.mkstemp(
+            dir=str(self.path.parent or "."), suffix=".tmp"
+        )
+        with os.fdopen(fd, "w") as f:
+            json.dump(self._data, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    def __len__(self) -> int:
+        return len(self._data)

@@ -1,0 +1,89 @@
+"""Input feature extraction (paper §4.2: "#rows/nnz, degree quantiles, F,
+device caps"). These drive the estimate stage and the cache key.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.sparse.csr import CSR, graph_signature
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Device capability summary. TPU v5e numbers are the dry-run/roofline
+    target (197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link ICI); the CPU
+    entry is a rough calibration for native probes in this container."""
+
+    name: str
+    peak_flops: float  # FLOP/s
+    hbm_bw: float  # bytes/s
+    link_bw: float  # bytes/s per ICI link
+    vmem_bytes: int = 16 * 2**20
+
+    @staticmethod
+    def tpu_v5e() -> "HardwareSpec":
+        return HardwareSpec("tpu_v5e", 197e12, 819e9, 50e9)
+
+    @staticmethod
+    def cpu() -> "HardwareSpec":
+        return HardwareSpec("cpu", 5e10, 2e10, 1e9, vmem_bytes=32 * 2**20)
+
+    @staticmethod
+    def current() -> "HardwareSpec":
+        plat = jax.devices()[0].platform
+        return HardwareSpec.tpu_v5e() if plat == "tpu" else HardwareSpec.cpu()
+
+
+def device_sig() -> str:
+    d = jax.devices()[0]
+    return f"{d.platform}:{getattr(d, 'device_kind', '?')}:jax{jax.__version__}"
+
+
+@dataclasses.dataclass(frozen=True)
+class InputFeatures:
+    """Everything the scheduler is allowed to look at."""
+
+    n_rows: int
+    n_cols: int
+    nnz: int
+    avg_deg: float
+    deg_p50: float
+    deg_p90: float
+    deg_p99: float
+    deg_max: float
+    skew: float  # p99 / max(p50, 1) — heavy-tail indicator
+    density: float
+    f: int  # feature width F
+    op: str  # "spmm" | "sddmm" | "csr_attention"
+    graph_sig: str
+    f_mod_4: bool  # paper's vec4 applicability bit (lane-align analogue)
+
+    @staticmethod
+    def from_csr(csr: CSR, f: int, op: str) -> "InputFeatures":
+        qs = csr.degree_quantiles((0.5, 0.9, 0.99, 1.0))
+        nnz = csr.nnz
+        return InputFeatures(
+            n_rows=csr.n_rows,
+            n_cols=csr.n_cols,
+            nnz=nnz,
+            avg_deg=nnz / max(csr.n_rows, 1),
+            deg_p50=float(qs[0]),
+            deg_p90=float(qs[1]),
+            deg_p99=float(qs[2]),
+            deg_max=float(qs[3]),
+            skew=float(qs[2] / max(qs[0], 1.0)),
+            density=nnz / max(csr.n_rows * csr.n_cols, 1),
+            f=f,
+            op=op,
+            graph_sig=graph_signature(csr),
+            f_mod_4=(f % 4 == 0),
+        )
+
+    def hub_threshold(self) -> int:
+        """Default hubT: degrees beyond p99 are 'hubs' (paper sweeps this;
+        AUTOSAGE_HUB_T overrides)."""
+        return int(max(self.deg_p99, 4 * max(self.avg_deg, 1.0)))

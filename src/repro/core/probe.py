@@ -1,0 +1,77 @@
+"""On-device micro-probes (paper §4.2).
+
+Probes time candidates on an *induced subgraph* — a stride sample of rows
+(default 2% of rows, min 512) carrying their full adjacency, so per-row
+work distribution (the thing the schedule depends on) is preserved. Each
+candidate is timed for `iters` iterations under a wall-time cap; we report
+the median, as the paper does.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import statistics
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.sparse.csr import CSR
+
+DEFAULT_FRAC = float(os.environ.get("AUTOSAGE_PROBE_FRAC", "0.02"))
+DEFAULT_MIN_ROWS = int(os.environ.get("AUTOSAGE_PROBE_MIN_ROWS", "512"))
+DEFAULT_ITERS = int(os.environ.get("AUTOSAGE_PROBE_ITERS", "5"))
+DEFAULT_CAP_MS = float(os.environ.get("AUTOSAGE_PROBE_CAP_MS", "1000"))
+
+
+def induced_subgraph(
+    csr: CSR, frac: float = DEFAULT_FRAC, min_rows: int = DEFAULT_MIN_ROWS,
+    seed: int = 0, n_rows: Optional[int] = None,
+) -> CSR:
+    n = csr.n_rows
+    n_sample = n_rows if n_rows is not None else max(min_rows, int(n * frac))
+    n_sample = min(n, n_sample)
+    # deterministic stride sample — identical sampling across candidates
+    # bounds probe noise (paper §12)
+    stride = max(1, n // n_sample)
+    rows = np.arange(0, n, stride)[:n_sample]
+    return csr.row_slice(rows)
+
+
+@dataclasses.dataclass
+class ProbeResult:
+    name: str
+    median_ms: float
+    times_ms: List[float]
+    iters_done: int
+    capped: bool
+
+
+def time_callable(
+    fn: Callable[[], jax.Array],
+    iters: int = DEFAULT_ITERS,
+    cap_ms: float = DEFAULT_CAP_MS,
+    name: str = "?",
+) -> ProbeResult:
+    """Median wall-clock of fn() with block_until_ready, under a cap."""
+    # warm-up (compile) — excluded, as in the paper's protocol (§6)
+    out = fn()
+    jax.block_until_ready(out)
+    times = []
+    start = time.perf_counter()
+    capped = False
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append((time.perf_counter() - t0) * 1e3)
+        if (time.perf_counter() - start) * 1e3 > cap_ms:
+            capped = True
+            break
+    return ProbeResult(
+        name=name,
+        median_ms=statistics.median(times),
+        times_ms=times,
+        iters_done=len(times),
+        capped=capped,
+    )

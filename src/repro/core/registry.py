@@ -1,0 +1,251 @@
+"""Kernel-variant registry: the candidate pool the scheduler selects from.
+
+A Variant bundles:
+  prepare(csr, **knobs) -> aux dict       (host-side format conversion,
+                                           amortized; analogous to cache
+                                           warm-up cost in the paper)
+  build(aux) -> JITTED callable(*dense)   (the timed/chosen runtime —
+                                           compiled once per shape; the
+                                           probe's warm-up call absorbs
+                                           compilation, as the paper's
+                                           protocol excludes it)
+  applicable(feat, hw) -> bool            (hard constraints, e.g. vec4's
+                                           F%4==0 / VMEM fit)
+  estimate via core.estimate              (roofline shortlist)
+
+The XLA `gather_segsum` / `gather_dot` variants are the guardrail
+baselines. Pallas variants join the pool on TPU backends (or when
+AUTOSAGE_PROBE_PALLAS=1 forces interpret-mode probing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.features import HardwareSpec, InputFeatures
+from repro.kernels import xla as kx
+from repro.sparse.bsr import csr_to_block_ell
+from repro.sparse.csr import CSR
+
+
+@dataclasses.dataclass
+class Variant:
+    name: str
+    op: str
+    prepare: Callable[..., Dict]
+    build: Callable[[Dict], Callable]
+    applicable: Callable[[InputFeatures, HardwareSpec], bool]
+    knobs: Dict = dataclasses.field(default_factory=dict)
+    is_baseline: bool = False
+
+    def full_name(self) -> str:
+        if not self.knobs:
+            return self.name
+        ks = ",".join(f"{k}={v}" for k, v in sorted(self.knobs.items()))
+        return f"{self.name}[{ks}]"
+
+
+def _dev(aux: Dict) -> Dict:
+    return {
+        k: (jnp.asarray(v) if isinstance(v, np.ndarray) else v)
+        for k, v in aux.items()
+    }
+
+
+# jitted once per function; aux dicts are pytree arguments so each new
+# shape compiles once and repeated calls hit the executable cache
+_spmm_gather_jit = jax.jit(kx.spmm_gather_segsum)
+_spmm_dense_jit = jax.jit(kx.spmm_dense)
+_spmm_ell_jit = jax.jit(kx.spmm_row_ell)
+_sddmm_gather_jit = jax.jit(kx.sddmm_gather_dot)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _spmm_hub_jit(n_rows: int, aux: Dict, b: jax.Array) -> jax.Array:
+    out = jnp.zeros((n_rows, b.shape[1]), jnp.float32)
+    if "hub_colind" in aux:
+        part = kx.spmm_row_ell({"colind": aux["hub_colind"], "val": aux["hub_val"]}, b)
+        out = out.at[aux["hub_rows"]].set(part)
+    if "light_colind" in aux:
+        part = kx.spmm_row_ell(
+            {"colind": aux["light_colind"], "val": aux["light_val"]}, b
+        )
+        out = out.at[aux["light_rows"]].set(part)
+    return out
+
+
+@jax.jit
+def _sddmm_ell_jit(aux: Dict, x: jax.Array, y: jax.Array) -> jax.Array:
+    ell = kx.sddmm_row_ell(
+        {"colind": aux["ell_colind"], "val": aux["ell_val"]}, x, y
+    )
+    return kx_ell_to_csr(ell, aux)
+
+
+def kx_ell_to_csr(ell_vals: jax.Array, aux: Dict) -> jax.Array:
+    rowptr = aux["rowptr"]
+    nnz = aux["colind"].shape[0]
+    rows = (
+        jnp.searchsorted(rowptr, jnp.arange(nnz, dtype=rowptr.dtype), side="right")
+        - 1
+    )
+    slot = jnp.arange(nnz, dtype=rowptr.dtype) - rowptr[rows]
+    return ell_vals[rows, slot]
+
+
+# ----------------------------------------------------------------- SpMM
+def _spmm_variants(feat: InputFeatures) -> List[Variant]:
+    vs = [
+        Variant(
+            name="gather_segsum",
+            op="spmm",
+            prepare=kx.prepare_csr,
+            build=lambda aux: (lambda b, a=_dev(aux): _spmm_gather_jit(a, b)),
+            applicable=lambda f, hw: True,
+            is_baseline=True,
+        ),
+        Variant(
+            name="dense",
+            op="spmm",
+            prepare=kx.prepare_dense,
+            build=lambda aux: (lambda b, a=_dev(aux): _spmm_dense_jit(a, b)),
+            # densify only for small AND genuinely dense-ish A — a scaled
+            # small graph with 3% density must not leak 'dense' into a
+            # benchmark standing in for a 0.2%-dense production graph
+            applicable=lambda f, hw: f.n_rows * f.n_cols <= 64_000_000
+            and f.density > 0.02,
+        ),
+        Variant(
+            name="row_ell",
+            op="spmm",
+            prepare=kx.prepare_row_ell,
+            build=lambda aux: (lambda b, a=_dev(aux): _spmm_ell_jit(a, b)),
+            # uniform padding explodes under skew; gate on tail ratio
+            applicable=lambda f, hw: f.deg_max <= max(32.0, 8 * max(f.avg_deg, 1.0))
+            and f.n_rows * f.deg_max <= 512_000_000,
+        ),
+    ]
+    hub_t = int(os.environ.get("AUTOSAGE_HUB_T", feat.hub_threshold()))
+    vs.append(
+        Variant(
+            name="hub_split_ell",
+            op="spmm",
+            prepare=lambda csr, t=hub_t: kx.prepare_hub_split_ell(csr, t),
+            build=lambda aux: (
+                lambda b, a=_dev(aux), n=int(aux["n_rows"]): _spmm_hub_jit(n, a, b)
+            ),
+            # heavy tail: a small set of rows dominates the work (the
+            # p99-based skew misses 1%-hub graphs like Table 10's)
+            applicable=lambda f, hw: f.deg_max > 4 * max(f.avg_deg, 1.0)
+            and f.deg_max > 2 * max(f.deg_p50, 1.0),
+            knobs={"hub_threshold": hub_t},
+        )
+    )
+    return vs
+
+
+def _pallas_spmm_variants(feat: InputFeatures, interpret: bool) -> List[Variant]:
+    out = []
+    # f_tile wide variant = the vec4 analogue (needs F % f_tile == 0)
+    for rb, bc in ((8, 8), (16, 8)):
+        for f_tile in (128, 256):
+            def _prep(csr, rb=rb, bc=bc):
+                bell = csr_to_block_ell(csr, rb=rb, bc=bc)
+                return {
+                    "colblk": bell.colblk,
+                    "vals": bell.vals,
+                    "bc": bc,
+                    "n_col_blocks": bell.n_col_blocks,
+                }
+
+            def _build(aux, f_tile=f_tile, interpret=interpret):
+                from repro.kernels.spmm_pallas import spmm_block_ell
+
+                colblk = jnp.asarray(aux["colblk"])
+                vals = jnp.asarray(aux["vals"])
+                bc = aux["bc"]
+
+                def run(b):
+                    pad_rows = aux["n_col_blocks"] * bc - b.shape[0]
+                    pad_f = (-b.shape[1]) % f_tile
+                    bp = jnp.pad(b, ((0, pad_rows), (0, pad_f)))
+                    return spmm_block_ell(
+                        colblk, vals, bp, f_tile=f_tile, interpret=interpret
+                    )[:, : b.shape[1]]
+
+                return run
+
+            out.append(
+                Variant(
+                    name="block_ell_pallas",
+                    op="spmm",
+                    prepare=_prep,
+                    build=_build,
+                    applicable=lambda f, hw, ft=f_tile: f.f >= 32,
+                    knobs={"rb": rb, "bc": bc, "f_tile": f_tile},
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------- SDDMM
+def _sddmm_variants(feat: InputFeatures) -> List[Variant]:
+    return [
+        Variant(
+            name="gather_dot",
+            op="sddmm",
+            prepare=kx.prepare_csr,
+            build=lambda aux: (
+                lambda x, y, a=_dev(aux): _sddmm_gather_jit(a, x, y)
+            ),
+            applicable=lambda f, hw: True,
+            is_baseline=True,
+        ),
+        Variant(
+            name="row_ell",
+            op="sddmm",
+            # NOTE: distinct key names — the CSR dict also has 'colind'
+            # (flat nnz), which must not clobber the (n, K) ELL table
+            prepare=lambda csr: {
+                **{f"ell_{k}": v for k, v in kx.prepare_row_ell(csr).items()},
+                **kx.prepare_csr(csr),
+            },
+            build=lambda aux: (
+                lambda x, y, a=_dev(aux): _sddmm_ell_jit(a, x, y)
+            ),
+            applicable=lambda f, hw: f.deg_max <= max(32.0, 8 * max(f.avg_deg, 1.0))
+            and f.n_rows * f.deg_max <= 512_000_000,
+        ),
+    ]
+
+
+# ------------------------------------------------------------ registry
+def candidates(
+    feat: InputFeatures, hw: HardwareSpec, include_pallas: Optional[bool] = None
+) -> List[Variant]:
+    if include_pallas is None:
+        on_tpu = jax.devices()[0].platform == "tpu"
+        include_pallas = on_tpu or os.environ.get("AUTOSAGE_PROBE_PALLAS") == "1"
+    interpret = jax.devices()[0].platform != "tpu"
+    if feat.op == "spmm":
+        vs = _spmm_variants(feat)
+        if include_pallas:
+            vs += _pallas_spmm_variants(feat, interpret)
+    elif feat.op == "sddmm":
+        vs = _sddmm_variants(feat)
+    else:
+        raise KeyError(feat.op)
+    return [v for v in vs if v.applicable(feat, hw)]
+
+
+def baseline(feat: InputFeatures, hw: HardwareSpec) -> Variant:
+    for v in candidates(feat, hw, include_pallas=False):
+        if v.is_baseline:
+            return v
+    raise RuntimeError(f"no baseline for op {feat.op}")

@@ -1,0 +1,197 @@
+"""AutoSAGE scheduler: estimate -> micro-probe -> guardrail -> cache.
+
+Faithful implementation of the paper's §4.2 decision procedure
+(`autosage_decide`), including the persistent cache fast-path, induced
+subgraph probing with identical sampling per candidate, top-k shortlist by
+roofline estimate, and the non-regression guardrail (Prop. 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import estimate as est
+from repro.core import probe as probe_mod
+from repro.core import registry
+from repro.core.cache import ScheduleCache
+from repro.core.features import HardwareSpec, InputFeatures, device_sig
+from repro.core.guardrail import GuardrailDecision, apply_guardrail
+from repro.sparse.csr import CSR
+
+
+@dataclasses.dataclass
+class Decision:
+    op: str
+    choice: str  # "baseline" or variant full-name
+    variant: registry.Variant  # the variant to run (baseline if fallback)
+    guardrail: Optional[GuardrailDecision]
+    from_cache: bool
+    probe_ms: Dict[str, float]  # candidate -> median ms (empty if cached)
+    probe_overhead_ms: float  # total warm-up: prepare + compile + iters
+    probe_iter_ms: float  # steady-state probe iterations only
+    estimates_ms: Dict[str, float]
+
+    def to_cache_entry(self) -> Dict[str, Any]:
+        return {
+            "choice": self.choice,
+            "probe_ms": self.probe_ms,
+            "estimates_ms": self.estimates_ms,
+        }
+
+
+class AutoSage:
+    """Holds the cache + hardware spec; one instance per process."""
+
+    def __init__(
+        self,
+        alpha: Optional[float] = None,
+        top_k: Optional[int] = None,
+        cache: Optional[ScheduleCache] = None,
+        hw: Optional[HardwareSpec] = None,
+        probe_frac: Optional[float] = None,
+        probe_iters: Optional[int] = None,
+        probe_cap_ms: Optional[float] = None,
+    ):
+        self.alpha = float(os.environ.get("AUTOSAGE_ALPHA", 0.95)) if alpha is None else alpha
+        self.top_k = int(os.environ.get("AUTOSAGE_TOPK", 3)) if top_k is None else top_k
+        self.cache = cache if cache is not None else ScheduleCache()
+        self.hw = hw or HardwareSpec.current()
+        self.probe_frac = probe_frac if probe_frac is not None else probe_mod.DEFAULT_FRAC
+        self.probe_iters = probe_iters if probe_iters is not None else probe_mod.DEFAULT_ITERS
+        self.probe_cap_ms = probe_cap_ms if probe_cap_ms is not None else probe_mod.DEFAULT_CAP_MS
+
+    # ------------------------------------------------------------------
+    def decide(
+        self,
+        csr: CSR,
+        f: int,
+        op: str,
+        probe_args_fn: Optional[Callable[[CSR], tuple]] = None,
+        seed: int = 0,
+    ) -> Decision:
+        """The paper's `autosage_decide(features, F, op)`.
+
+        probe_args_fn(sub_csr) -> dense args for one probe invocation;
+        defaults to random dense operands of width F.
+        """
+        feat = InputFeatures.from_csr(csr, f, op)
+        key = ScheduleCache.key(device_sig(), feat.graph_sig, f, op, self.alpha)
+
+        cands = registry.candidates(feat, self.hw)
+        base = registry.baseline(feat, self.hw)
+        by_name = {v.full_name(): v for v in cands}
+        by_name["baseline"] = base
+
+        cached = self.cache.get(key) if self.cache is not None else None
+        if cached is not None:
+            choice = cached["choice"]
+            variant = by_name.get(choice, base)
+            return Decision(
+                op=op, choice=choice, variant=variant, guardrail=None,
+                from_cache=True, probe_ms={}, probe_overhead_ms=0.0,
+                probe_iter_ms=0.0, estimates_ms={},
+            )
+
+        # ---- estimate stage: shortlist top-k non-baseline candidates
+        estimates = {
+            v.full_name(): est.estimate(feat, self.hw, v.name, v.knobs) * 1e3
+            for v in cands
+        }
+        shortlist = sorted(
+            (v for v in cands if not v.is_baseline),
+            key=lambda v: estimates[v.full_name()],
+        )[: self.top_k]
+
+        # ---- probe stage: TWO induced subgraphs (1x and 2x rows).
+        # Comparing the cost *slope* between the two sizes cancels each
+        # variant's fixed dispatch/launch overhead, which otherwise makes
+        # small probes mispredict full-graph performance (a failure mode
+        # of the paper's single-point probe we hit on ER; see
+        # EXPERIMENTS.md "probe-scale bias"). AUTOSAGE_PROBE_MODE=point
+        # restores the paper's single-point behaviour.
+        mode = os.environ.get("AUTOSAGE_PROBE_MODE", "slope")
+        t_probe0 = time.perf_counter()
+        sub1 = probe_mod.induced_subgraph(csr, frac=self.probe_frac, seed=seed)
+        subs = [sub1]
+        if mode == "slope" and sub1.n_rows * 2 <= csr.n_rows:
+            subs.append(
+                probe_mod.induced_subgraph(csr, seed=seed, n_rows=sub1.n_rows * 2)
+            )
+
+        def _args_for(sub):
+            if probe_args_fn is not None:
+                return probe_args_fn(sub)
+            rng = np.random.default_rng(seed)
+            if op == "spmm":
+                return (rng.standard_normal((sub.n_cols, f)).astype(np.float32),)
+            if op == "sddmm":
+                x = rng.standard_normal((sub.n_rows, f)).astype(np.float32)
+                y = rng.standard_normal((sub.n_cols, f)).astype(np.float32)
+                return (x, y)
+            raise KeyError(op)
+
+        args_per_sub = [_args_for(s) for s in subs]
+        probe_ms: Dict[str, float] = {}
+        iter_ms_total = [0.0]
+
+        def _time(v: registry.Variant) -> float:
+            """Effective cost: slope between the two probe sizes (ms per
+            full-graph-equivalent), or plain median in point mode."""
+            times = []
+            for sub, args in zip(subs, args_per_sub):
+                aux = v.prepare(sub)
+                run = v.build(aux)
+                res = probe_mod.time_callable(
+                    lambda: run(*args), iters=self.probe_iters,
+                    cap_ms=self.probe_cap_ms, name=v.full_name(),
+                )
+                iter_ms_total[0] += sum(res.times_ms)
+                times.append(res.median_ms)
+            if len(times) == 2:
+                slope = (times[1] - times[0]) / max(subs[1].n_rows - subs[0].n_rows, 1)
+                if slope > 0:
+                    return slope * csr.n_rows  # extrapolated marginal cost
+            return times[-1]
+
+        tb = _time(base)
+        probe_ms["baseline"] = tb
+        best_name, t_star = None, float("inf")
+        for v in shortlist:
+            t = _time(v)
+            probe_ms[v.full_name()] = t
+            if t < t_star:
+                best_name, t_star = v.full_name(), t
+        probe_overhead_ms = (time.perf_counter() - t_probe0) * 1e3
+
+        gr = apply_guardrail(best_name, t_star, tb, self.alpha)
+        variant = by_name[gr.choice] if gr.accepted else base
+        decision = Decision(
+            op=op, choice=gr.choice, variant=variant, guardrail=gr,
+            from_cache=False, probe_ms=probe_ms,
+            probe_overhead_ms=probe_overhead_ms,
+            probe_iter_ms=iter_ms_total[0], estimates_ms=estimates,
+        )
+        if self.cache is not None:
+            self.cache.put(key, decision.to_cache_entry())
+        return decision
+
+    # ------------------------------------------------------------------
+    def build_runner(self, csr: CSR, decision: Decision) -> Callable:
+        """Prepare the chosen variant on the FULL graph and return the
+        jitted callable."""
+        aux = decision.variant.prepare(csr)
+        return decision.variant.build(aux)
+
+    def spmm(self, csr: CSR, b, seed: int = 0):
+        """One-call convenience: decide + prepare + run (paper's
+        autosage::spmm_csr binding)."""
+        d = self.decide(csr, int(b.shape[1]), "spmm", seed=seed)
+        return self.build_runner(csr, d)(b), d
+
+    def sddmm(self, csr: CSR, x, y, seed: int = 0):
+        d = self.decide(csr, int(x.shape[1]), "sddmm", seed=seed)
+        return self.build_runner(csr, d)(x, y), d

@@ -1,0 +1,35 @@
+"""CSV + JSON telemetry (paper §10: every CSV gets a .meta.json sidecar
+with device, software versions, and the AUTOSAGE_* env snapshot)."""
+from __future__ import annotations
+
+import csv
+import json
+import os
+import platform
+from pathlib import Path
+from typing import Dict, List, Sequence
+
+import jax
+
+from repro.core.features import device_sig
+
+
+def _meta() -> Dict:
+    return {
+        "device_sig": device_sig(),
+        "jax_version": jax.__version__,
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "env": {k: v for k, v in os.environ.items() if k.startswith("AUTOSAGE_")},
+    }
+
+
+def write_csv(path: str, header: Sequence[str], rows: List[Sequence]) -> None:
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    with open(p, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    with open(str(p) + ".meta.json", "w") as f:
+        json.dump(_meta(), f, indent=1)

@@ -1,0 +1,167 @@
+"""Partition-spec rules: DP/FSDP over 'data', TP over 'model', EP for MoE
+experts, SP (sequence/context parallel) for long-context KV caches, pure
+DP over 'pod' (cross-pod traffic = gradient reduction only).
+
+Rules are name-based with divisibility sanitization: an axis assignment
+is dropped (replicated) when the dim size does not divide the mesh axis —
+e.g. whisper's vocab 51865 cannot shard 16-way, so it falls back cleanly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCfg
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def sanitize(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop axis assignments that do not divide the dimension."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axis in zip(shape, parts[: len(shape)]):
+        out.append(axis if axis and dim % _axis_size(mesh, axis) == 0 else None)
+    return P(*out)
+
+
+# --------------------------------------------------------------- params
+def _rule_for(path_names, shape, cfg: ArchConfig) -> P:
+    name = path_names[-1]
+    joined = "/".join(path_names)
+    nd = len(shape)
+
+    # MoE expert tensors: EP over data, TP over expert-hidden
+    if "ffn" in path_names and name in ("w_gate", "w_up", "w_down") and nd == 3:
+        if name == "w_down":
+            return P("data", "model", None)
+        return P("data", None, "model")
+    if name == "router":
+        return P(None, None)
+
+    if name in ("embed", "enc_pos", "dec_pos"):
+        return P("model", None) if nd == 2 else P(None)
+    if name == "unembed":
+        return P("data", "model")
+    # attention / generic matmuls: FSDP in-dim over data, TP out-dim over model
+    if nd == 2:
+        if name in ("wo", "w_down", "w_out"):  # row-parallel side
+            return P("model", "data")
+        return P("data", "model")
+    if nd == 3:  # stacked-scan versions get a leading layer dim
+        if name in ("wo", "w_down", "w_out"):
+            return P(None, "model", "data")
+        return P(None, "data", "model")
+    return P(*([None] * nd))
+
+
+def param_specs(params_shape: Any, cfg: ArchConfig, mesh: Mesh) -> Any:
+    """Pytree of PartitionSpecs matching a params(-shape) pytree.
+
+    Handles the stacked-layer dimension: tensors under 'tail_blocks' (or
+    'enc_layers'/'dec_layers') carry a leading layer axis that stays
+    unsharded.
+    """
+
+    def spec(path, leaf):
+        names = [
+            p.key if hasattr(p, "key") else str(p.idx if hasattr(p, "idx") else p)
+            for p in path
+        ]
+        stacked = any(n in ("tail_blocks", "enc_layers", "dec_layers") for n in names)
+        shape = leaf.shape
+        if stacked and len(shape) >= 1:
+            inner = _rule_for(names, shape[1:], cfg)
+            full = P(None, *tuple(inner))
+        else:
+            full = _rule_for(names, shape, cfg)
+        return sanitize(full, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+# ---------------------------------------------------------------- batch
+def batch_axes_for(global_batch: int, mesh: Mesh) -> Optional[Tuple[str, ...]]:
+    """Largest prefix of ('pod','data') whose product divides the batch."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    chosen = []
+    size = 1
+    for a in axes:
+        if global_batch % (size * mesh.shape[a]) == 0:
+            chosen.append(a)
+            size *= mesh.shape[a]
+    return tuple(chosen) or None
+
+
+def batch_specs(batch_shape: Dict, cfg: ArchConfig, mesh: Mesh) -> Dict:
+    gb = batch_shape["tokens"].shape[0]
+    ba = batch_axes_for(gb, mesh)
+
+    def spec(path, leaf):
+        s = [ba] + [None] * (len(leaf.shape) - 1)
+        # sequence dim of long sequences: context-parallel over 'data'
+        # when the batch does not cover it
+        if ba is None and len(leaf.shape) >= 2:
+            s[1] = "data" if leaf.shape[1] % _axis_size(mesh, "data") == 0 else None
+        return sanitize(P(*s), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+# ---------------------------------------------------------------- cache
+def cache_specs(cache_shape: Any, cfg: ArchConfig, mesh: Mesh,
+                global_batch: int) -> Any:
+    """KV caches: batch over ('pod','data') when divisible; otherwise the
+    sequence/length dim is sharded ('data','model') (context parallelism,
+    the long_500k path). SSM/recurrent states shard batch, then heads."""
+    ba = batch_axes_for(global_batch, mesh)
+
+    def spec(path, leaf):
+        names = [getattr(p, "key", "") for p in path]
+        shape = leaf.shape
+        stacked = "tail" in names  # leading layer-stack dim
+        dims = shape[1:] if stacked else shape
+        name = names[-1] if names else ""
+        if name == "pos" or len(dims) == 0:
+            s = P(*([None] * len(shape)))
+            return sanitize(s, shape, mesh)
+        inner: list = [None] * len(dims)
+        if name in ("k", "v", "c_kv", "k_rope", "conv", "enc_out"):
+            inner[0] = ba  # batch
+            if len(dims) >= 2:
+                if ba is None:
+                    inner[1] = ("data", "model")  # context parallel
+                else:
+                    # sequence-parallel cache length (SP for decode);
+                    # includes the MLA latent cache (c_kv/k_rope)
+                    inner[1] = (
+                        "model" if name in ("k", "v", "c_kv", "k_rope") else None
+                    )
+            # NOTE: for (k,v) with batch sharded we shard length over
+            # 'model' — sequence parallelism for decode.
+        elif name == "h":  # recurrent states (B, H, N, P) or (B, W)
+            inner[0] = ba
+            if len(dims) >= 2:
+                inner[1] = "model"
+        s = P(None, *inner) if stacked else P(*inner)
+        return sanitize(s, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def to_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

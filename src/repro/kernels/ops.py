@@ -1,0 +1,96 @@
+"""Public jit'd entry points for the kernel layer.
+
+One function per op; `impl` selects the Pallas TPU kernel (interpret=True
+on CPU for validation) or the XLA fallback. Oracles live in ref.py;
+preprocessing (CSR -> block-ELL) in sparse/bsr.py. The AutoSAGE scheduler
+(core/) picks among these via the variant registry.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.attention_pallas import fused_csr_attention
+from repro.kernels.sddmm_pallas import sddmm_block_ell
+from repro.kernels.softmax_pallas import row_softmax_block_ell
+from repro.kernels.spmm_pallas import spmm_block_ell
+from repro.sparse.bsr import BlockELL, csr_to_block_ell
+from repro.sparse.csr import CSR
+
+
+def _interpret() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+def spmm(csr: CSR, b: jax.Array, impl: str = "auto", rb: int = 8, bc: int = 8,
+         f_tile: int = 128) -> jax.Array:
+    """C = A @ B. impl: auto|pallas|xla."""
+    if impl == "auto":
+        impl = "pallas" if not _interpret() else "xla"
+    if impl == "xla":
+        return ref.spmm_ref(
+            jnp.asarray(csr.rowptr), jnp.asarray(csr.colind),
+            None if csr.val is None else jnp.asarray(csr.val), b,
+        )
+    bell = csr_to_block_ell(csr, rb=rb, bc=bc)
+    pad_rows = bell.n_col_blocks * bc - b.shape[0]
+    pad_f = (-b.shape[1]) % f_tile
+    bp = jnp.pad(b, ((0, pad_rows), (0, pad_f)))
+    out = spmm_block_ell(
+        jnp.asarray(bell.colblk), jnp.asarray(bell.vals), bp,
+        f_tile=f_tile, interpret=_interpret(),
+    )
+    return out[: csr.n_rows, : b.shape[1]]
+
+
+def sddmm(csr: CSR, x: jax.Array, y: jax.Array, impl: str = "auto",
+          rb: int = 8, bc: int = 8) -> jax.Array:
+    """A~_ij = <X_i, Y_j> on S(A); returns CSR-ordered nnz values (xla)
+    or block-ELL tiles (pallas)."""
+    if impl == "auto":
+        impl = "pallas" if not _interpret() else "xla"
+    if impl == "xla":
+        return ref.sddmm_ref(
+            jnp.asarray(csr.rowptr), jnp.asarray(csr.colind), x, y
+        )
+    bell = csr_to_block_ell(csr, rb=rb, bc=bc)
+    mask = jnp.asarray((bell.vals != 0).astype(np.float32))
+    xp = jnp.pad(x, ((0, bell.padded_rows - x.shape[0]), (0, 0)))
+    yp = jnp.pad(y, ((0, bell.n_col_blocks * bc - y.shape[0]), (0, 0)))
+    return sddmm_block_ell(
+        jnp.asarray(bell.colblk), mask, xp, yp, interpret=_interpret()
+    )
+
+
+def csr_attention(
+    csr: CSR, q: jax.Array, k: jax.Array, v: jax.Array,
+    impl: str = "auto", rb: int = 8, bc: int = 8,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """The paper's pipeline (SDDMM -> row-softmax -> SpMM). impl=pallas
+    uses the fused flash-style kernel (beyond-paper, one HBM pass)."""
+    if impl == "auto":
+        impl = "pallas" if not _interpret() else "xla"
+    if impl == "xla":
+        return ref.csr_attention_ref(
+            jnp.asarray(csr.rowptr), jnp.asarray(csr.colind), q, k, v, scale
+        )
+    bell = csr_to_block_ell(csr, rb=rb, bc=bc)
+    mask = jnp.asarray((bell.vals != 0).astype(np.float32))
+    qp = jnp.pad(q, ((0, bell.padded_rows - q.shape[0]), (0, 0)))
+    kp = jnp.pad(k, ((0, bell.n_col_blocks * bc - k.shape[0]), (0, 0)))
+    vp = jnp.pad(v, ((0, bell.n_col_blocks * bc - v.shape[0]), (0, 0)))
+    out = fused_csr_attention(
+        jnp.asarray(bell.colblk), mask, qp, kp, vp, scale=scale,
+        interpret=_interpret(),
+    )
+    return out[: csr.n_rows]
+
+
+def row_softmax(bell_logits: jax.Array, mask: jax.Array) -> jax.Array:
+    """Block-ELL row softmax (Pallas; interpret on CPU)."""
+    return row_softmax_block_ell(bell_logits, mask, interpret=_interpret())

@@ -1,0 +1,138 @@
+"""Pure-jnp oracles for every kernel. Ground truth for tests and the
+guardrail baseline semantics.
+
+CSR device representation: rowptr int32[n+1], colind int32[nnz],
+val float[nnz] (or None => ones).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _row_ids(rowptr: jax.Array, nnz: int) -> jax.Array:
+    """row id of each nnz entry, from rowptr."""
+    return jnp.searchsorted(rowptr, jnp.arange(nnz, dtype=rowptr.dtype), side="right") - 1
+
+
+def spmm_ref(
+    rowptr: jax.Array,
+    colind: jax.Array,
+    val: Optional[jax.Array],
+    b: jax.Array,
+) -> jax.Array:
+    """C = A @ B for CSR A (n_rows x n_cols), dense B (n_cols x F)."""
+    n_rows = rowptr.shape[0] - 1
+    nnz = colind.shape[0]
+    rows = _row_ids(rowptr, nnz)
+    gathered = b[colind]  # (nnz, F)
+    if val is not None:
+        gathered = gathered * val[:, None].astype(b.dtype)
+    return jax.ops.segment_sum(gathered, rows, num_segments=n_rows)
+
+
+def sddmm_ref(
+    rowptr: jax.Array,
+    colind: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+) -> jax.Array:
+    """A~_ij = <X_i, Y_j> for (i,j) in S(A); returns val-vector[nnz]."""
+    nnz = colind.shape[0]
+    rows = _row_ids(rowptr, nnz)
+    return jnp.sum(x[rows] * y[colind], axis=-1)
+
+
+def row_softmax_ref(
+    rowptr: jax.Array, colind: jax.Array, val: jax.Array
+) -> jax.Array:
+    """Numerically stable softmax within each CSR row (over its nnz)."""
+    n_rows = rowptr.shape[0] - 1
+    nnz = colind.shape[0]
+    rows = _row_ids(rowptr, nnz)
+    row_max = jax.ops.segment_max(val, rows, num_segments=n_rows)
+    row_max = jnp.where(jnp.isfinite(row_max), row_max, 0.0)
+    shifted = jnp.exp(val - row_max[rows])
+    denom = jax.ops.segment_sum(shifted, rows, num_segments=n_rows)
+    return shifted / jnp.maximum(denom[rows], 1e-30)
+
+
+def csr_attention_ref(
+    rowptr: jax.Array,
+    colind: jax.Array,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """SDDMM -> row-softmax -> SpMM (the paper's pipeline, §8.7)."""
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = sddmm_ref(rowptr, colind, q, k) * scale
+    probs = row_softmax_ref(rowptr, colind, logits)
+    return spmm_ref(rowptr, colind, probs, v)
+
+
+# ---- block-ELL oracles (TPU-native format; DESIGN.md §2) -------------
+
+
+def spmm_block_ell_ref(
+    colblk: jax.Array,  # int32 (nrb, W)
+    vals: jax.Array,  # f32 (nrb, W, rb, bc)
+    b: jax.Array,  # (n_col_blocks*bc, F), pre-padded
+    bc: int,
+) -> jax.Array:
+    """Returns (nrb*rb, F). Padded slots have zero vals => no masking."""
+    n_col_blocks = b.shape[0] // bc
+    b_blocks = b.reshape(n_col_blocks, bc, b.shape[1])
+    gathered = b_blocks[colblk]  # (nrb, W, bc, F)
+    out = jnp.einsum("swrb,swbf->srf", vals, gathered.astype(vals.dtype))
+    return out.reshape(-1, b.shape[1])
+
+
+def sddmm_block_ell_ref(
+    colblk: jax.Array,
+    mask: jax.Array,  # (nrb, W, rb, bc) structural 0/1 (incl. slot padding)
+    x: jax.Array,  # (nrb*rb, F)
+    y: jax.Array,  # (n_col_blocks*bc, F)
+    bc: int,
+) -> jax.Array:
+    """Block-ELL SDDMM: per stored micro-tile, X_i @ Y_j^T, masked."""
+    nrb, w = colblk.shape
+    rb = mask.shape[2]
+    xb = x.reshape(nrb, rb, x.shape[1])
+    yb = y.reshape(-1, bc, y.shape[1])[colblk]  # (nrb, W, bc, F)
+    tiles = jnp.einsum("srf,swbf->swrb", xb, yb)
+    return tiles * mask
+
+
+def row_softmax_block_ell_ref(
+    vals: jax.Array,  # (nrb, W, rb, bc) logits
+    mask: jax.Array,  # structural mask, same shape
+) -> jax.Array:
+    """Softmax per padded row (axis over (W, bc)), masked positions -> 0."""
+    neg = jnp.finfo(vals.dtype).min
+    masked = jnp.where(mask > 0, vals, neg)
+    m = jnp.max(masked, axis=(1, 3), keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(masked - m) * (mask > 0)
+    denom = jnp.sum(e, axis=(1, 3), keepdims=True)
+    return e / jnp.maximum(denom, 1e-30)
+
+
+def csr_attention_block_ell_ref(
+    colblk: jax.Array,
+    mask: jax.Array,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    bc: int,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = sddmm_block_ell_ref(colblk, mask, q, k, bc) * scale
+    probs = row_softmax_block_ell_ref(logits, mask)
+    return spmm_block_ell_ref(colblk, probs, v, bc)

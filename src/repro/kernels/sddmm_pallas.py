@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: block-ELL SDDMM (A~_ij = <X_i, Y_j> on S(A)).
+
+Grid = (row_blocks, ell_slots, f_chunks); accumulates the X@Y^T micro-tile
+over feature chunks and applies the structural mask on the last chunk.
+Same scalar-prefetch mechanism and knobs as the SpMM kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sddmm_kernel(colblk_ref, x_ref, y_ref, mask_ref, out_ref, *, n_f_chunks):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x_tile = x_ref[...]  # (rb, fc)
+    y_tile = y_ref[...]  # (bc, fc)
+    out_ref[...] += jnp.dot(
+        x_tile, y_tile.T, preferred_element_type=jnp.float32
+    )[None, None]
+
+    @pl.when(j == n_f_chunks - 1)
+    def _mask():
+        out_ref[...] *= mask_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("f_chunk", "interpret"))
+def sddmm_block_ell(
+    colblk: jax.Array,  # int32 (nrb, W)
+    mask: jax.Array,  # f32 (nrb, W, rb, bc) structural 0/1
+    x: jax.Array,  # (nrb*rb, F)
+    y: jax.Array,  # (n_col_blocks*bc, F)
+    f_chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    nrb, w, rb, bc = mask.shape
+    f = x.shape[1]
+    assert f % f_chunk == 0, (f, f_chunk)
+    n_f_chunks = f // f_chunk
+    grid = (nrb, w, n_f_chunks)
+
+    out = pl.pallas_call(
+        functools.partial(_sddmm_kernel, n_f_chunks=n_f_chunks),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((rb, f_chunk), lambda i, k, j, cb: (i, j)),
+                pl.BlockSpec((bc, f_chunk), lambda i, k, j, cb: (cb[i, k], j)),
+                pl.BlockSpec((1, 1, rb, bc), lambda i, k, j, cb: (i, k, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, rb, bc), lambda i, k, j, cb: (i, k, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nrb, w, rb, bc), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+    )(colblk, x, y, mask)
+    return out

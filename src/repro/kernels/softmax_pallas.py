@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: numerically-stable row softmax over block-ELL values.
+
+One grid step per row-block; the whole (W, rb, bc) slab is VMEM-resident
+(W*rb*bc*4 bytes — e.g. W=1024, rb=16, bc=8 => 512 KiB, well inside VMEM).
+For larger slabs the ops layer falls back to the XLA reference — a
+scheduler-visible applicability constraint.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _softmax_kernel(vals_ref, mask_ref, out_ref):
+    v = vals_ref[...]  # (1, W, rb, bc)
+    m = mask_ref[...]
+    neg = jnp.finfo(v.dtype).min
+    masked = jnp.where(m > 0, v, neg)
+    row_max = jnp.max(masked, axis=(1, 3), keepdims=True)  # (1,1,rb,1)
+    row_max = jnp.where(row_max > neg, row_max, 0.0)
+    e = jnp.exp(masked - row_max) * (m > 0)
+    denom = jnp.sum(e, axis=(1, 3), keepdims=True)
+    out_ref[...] = e / jnp.maximum(denom, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def row_softmax_block_ell(
+    vals: jax.Array,  # f32 (nrb, W, rb, bc) logits
+    mask: jax.Array,  # f32 same shape, structural 0/1
+    interpret: bool = False,
+) -> jax.Array:
+    nrb, w, rb, bc = vals.shape
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(nrb,),
+        in_specs=[
+            pl.BlockSpec((1, w, rb, bc), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, w, rb, bc), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w, rb, bc), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(vals.shape, jnp.float32),
+        interpret=interpret,
+    )(vals, mask)

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: block-ELL SpMM (C = A @ B, A sparse).
+
+TPU adaptation of the paper's SpMM templates (DESIGN.md §2):
+  - grid = (row_blocks, f_tiles, ell_slots); one MXU matmul per micro-tile
+  - scalar-prefetched ``colblk`` drives the B-operand index_map — the
+    block-granular analogue of the CUDA warp's per-row column gather
+  - knobs: rb (rows/block), bc (cols/block), f_tile (feature tile — the
+    vec4 analogue is a wide f_tile), hub-split handled by running two
+    partitions of the BlockELL format
+
+Padded slots carry zero values and colblk=0, so they contribute nothing
+(no masking needed in the hot loop).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_kernel(colblk_ref, vals_ref, b_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a_tile = vals_ref[0, 0]  # (rb, bc) f32
+    b_tile = b_ref[...]  # (bc, f_tile)
+    out_ref[...] += jnp.dot(
+        a_tile, b_tile.astype(a_tile.dtype), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("f_tile", "interpret"))
+def spmm_block_ell(
+    colblk: jax.Array,  # int32 (nrb, W)
+    vals: jax.Array,  # f32 (nrb, W, rb, bc)
+    b: jax.Array,  # (n_col_blocks*bc, F) — F % f_tile == 0
+    f_tile: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    nrb, w, rb, bc = vals.shape
+    n_b_rows, f = b.shape
+    assert f % f_tile == 0, (f, f_tile)
+    assert n_b_rows % bc == 0
+    grid = (nrb, f // f_tile, w)
+
+    out = pl.pallas_call(
+        _spmm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, rb, bc), lambda i, j, k, cb: (i, k, 0, 0)),
+                pl.BlockSpec((bc, f_tile), lambda i, j, k, cb: (cb[i, k], j)),
+            ],
+            out_specs=pl.BlockSpec((rb, f_tile), lambda i, j, k, cb: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nrb * rb, f), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+    )(colblk, vals, b)
+    return out

@@ -1,0 +1,69 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any jax import (jax locks the
+# device count at first init). Everything below is ordinary code.
+import argparse
+import json
+import sys
+
+from repro.configs.base import ARCH_IDS, SHAPES
+from repro.launch.dryrun_lib import (
+    LM_ARCHS,
+    cell_key,
+    load_results,
+    run_cell,
+    save_results,
+)
+
+DEFAULT_OUT = "results/dryrun.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--force", action="store_true", help="re-run cached cells")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    archs = LM_ARCHS if args.arch == "all" else [args.arch.replace("-", "_").replace(".", "_")]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = load_results(args.out)
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = cell_key(arch, shape, mp)
+                if key in results and results[key].get("ok") and not args.force:
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                res = run_cell(arch, shape, mp)
+                results[key] = res
+                save_results(args.out, results)
+                if res["ok"]:
+                    r = res["roofline"]
+                    print(
+                        f"  ok ({res['compile_s']}s) bottleneck={r['bottleneck']} "
+                        f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                        f"coll={r['collective_s']:.4f}s",
+                        flush=True,
+                    )
+                    if res.get("memory"):
+                        print(f"  memory_analysis: {res['memory']}", flush=True)
+                else:
+                    n_fail += 1
+                    print(f"  FAIL: {res['error']}", flush=True)
+                    if args.verbose:
+                        print(res.get("traceback", ""))
+    done = sum(1 for r in results.values() if r.get("ok"))
+    print(f"[dryrun] {done} cells ok, {n_fail} failed this run -> {args.out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

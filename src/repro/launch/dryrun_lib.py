@@ -1,0 +1,181 @@
+"""Dry-run core: lower + compile every (arch x shape x mesh) cell against
+ShapeDtypeStruct inputs, record memory/cost/roofline. No device data is
+ever allocated. Import this only from a process whose XLA device count
+was already forced (see dryrun.py lines 1-2).
+"""
+from __future__ import annotations
+
+import json
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, SHAPES, ArchConfig, ShapeCfg, get_config
+from repro.distributed import sharding as shd
+from repro.launch import roofline as rf
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro.optim.adamw import AdamWConfig, OptState
+from repro.train.step import (
+    TrainState,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+LM_ARCHS = [a for a in ARCH_IDS if a != "gnn_sage"]
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Returns (lowered, meta) for one cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    if shape.kind == "train":
+        state_sds = sp.state_specs(cfg)
+        batch_sds = sp.train_batch_specs(cfg, shape)
+        pspec = shd.param_specs(state_sds.params, cfg, mesh)
+        state_spec = TrainState(
+            step=P(),
+            params=pspec,
+            opt=OptState(count=P(), m=pspec, v=pspec),
+        )
+        bspec = shd.batch_specs(batch_sds, cfg, mesh)
+        step = make_train_step(cfg, AdamWConfig(), mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(_ns(mesh, state_spec), _ns(mesh, bspec)),
+            out_shardings=(_ns(mesh, state_spec), None),
+            donate_argnums=(0,),
+        )
+        lowered = jitted.lower(state_sds, batch_sds)
+    elif shape.kind == "prefill":
+        params_sds = sp.params_specs(cfg)
+        batch_sds = sp.prefill_batch_specs(cfg, shape)
+        cache_sds = sp.cache_specs_abstract(cfg, shape.global_batch, shape.seq_len)
+        pspec = shd.param_specs(params_sds, cfg, mesh)
+        bspec = shd.batch_specs(batch_sds, cfg, mesh)
+        cspec = shd.cache_specs(cache_sds, cfg, mesh, shape.global_batch)
+        step = make_prefill_step(cfg, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(
+                _ns(mesh, pspec), _ns(mesh, bspec), _ns(mesh, cspec),
+            ),
+            out_shardings=(None, _ns(mesh, cspec)),
+            donate_argnums=(2,),
+        )
+        lowered = jitted.lower(params_sds, batch_sds, cache_sds)
+    else:  # decode / long_decode: one new token against a seq_len cache
+        params_sds = sp.params_specs(cfg)
+        tok_sds = sp.decode_token_specs(shape.global_batch)
+        cache_sds = sp.cache_specs_abstract(cfg, shape.global_batch, shape.seq_len)
+        pspec = shd.param_specs(params_sds, cfg, mesh)
+        cspec = shd.cache_specs(cache_sds, cfg, mesh, shape.global_batch)
+        step = make_decode_step(cfg, mesh, long_ctx=(shape.kind == "long_decode"))
+        jitted = jax.jit(
+            step,
+            in_shardings=(_ns(mesh, pspec), None, _ns(mesh, cspec)),
+            out_shardings=(None, _ns(mesh, cspec)),
+            donate_argnums=(2,),
+        )
+        lowered = jitted.lower(params_sds, tok_sds, cache_sds)
+
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(len(mesh.devices.flat)),
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.active_params(),
+        "tokens_per_step": shape.global_batch * (shape.seq_len if shape.kind in ("train", "prefill") else 1),
+    }
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> Dict[str, Any]:
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, multi_pod)
+        compiled = lowered.compile()
+        roof = rf.analyze(compiled)
+        raw = rf.analyze_raw(compiled)
+        mem: Dict[str, Any] = {}
+        try:
+            ma = compiled.memory_analysis()
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            ):
+                if hasattr(ma, k):
+                    mem[k] = int(getattr(ma, k))
+        except Exception as e:  # CPU backend may not implement it
+            mem["error"] = str(e)[:200]
+        mf = rf.model_flops(
+            meta["n_active_params"], meta["tokens_per_step"],
+            "train" if meta["kind"] == "train" else "serve",
+        )
+        chips = meta["n_devices"]
+        result = {
+            **meta,
+            "ok": True,
+            "compile_s": round(time.time() - t0, 1),
+            "roofline": roof.to_dict(),
+            "xla_raw": raw,
+            "memory": mem,
+            "model_flops_total": mf,
+            "hlo_flops_total": roof.flops * chips,
+            "useful_flops_ratio": (mf / (roof.flops * chips)) if roof.flops else None,
+        }
+    except Exception as e:
+        result = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "ok": False,
+            "compile_s": round(time.time() - t0, 1),
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-2000:],
+        }
+    finally:
+        # a sweep compiles ~80 big SPMD programs in one process — drop
+        # executable caches between cells or the sweep OOMs the host
+        jax.clear_caches()
+    return result
+
+
+def load_results(path: str) -> Dict[str, Dict]:
+    p = Path(path)
+    if p.exists():
+        return json.loads(p.read_text())
+    return {}
+
+
+def save_results(path: str, results: Dict[str, Dict]) -> None:
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    tmp = p.with_suffix(".tmp")
+    tmp.write_text(json.dumps(results, indent=1, sort_keys=True))
+    tmp.replace(p)
+
+
+def cell_key(arch: str, shape: str, multi_pod: bool) -> str:
+    return f"{arch}|{shape}|{'multi' if multi_pod else 'single'}"

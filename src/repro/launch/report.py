@@ -1,0 +1,73 @@
+"""Generate the EXPERIMENTS.md §Roofline table from results/dryrun.json.
+
+    PYTHONPATH=src python -m repro.launch.report [--results results/dryrun.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def _advice(r: Dict) -> str:
+    roof = r["roofline"]
+    bn = roof["bottleneck"]
+    kind = r.get("kind", "?")
+    if bn == "memory":
+        if kind in ("decode", "long_decode"):
+            return "KV-cache traffic dominates: quantize cache / multi-query"
+        return "activation+weight traffic: wider fusion, bf16 flash attention"
+    if bn == "collective":
+        return "resharding traffic: align layer in/out shardings to cut all-gathers"
+    return "MXU-bound: already near compute roofline; raise per-chip batch"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun.json")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    args = ap.parse_args()
+    results = json.load(open(args.results))
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for mesh in meshes:
+        rows = {
+            k: v for k, v in results.items()
+            if k.endswith(f"|{mesh}") and v.get("ok")
+        }
+        print(f"\n### Roofline — {'16x16 single-pod' if mesh == 'single' else '2x16x16 multi-pod'}\n")
+        print("| arch | shape | compute (s) | memory (s) | collective (s) | bottleneck | MODEL/HLO flops | what moves the dominant term |")
+        print("|---|---|---|---|---|---|---|---|")
+        for k in sorted(rows):
+            r = rows[k]
+            roof = r["roofline"]
+            ratio = r.get("useful_flops_ratio")
+            print(
+                f"| {r['arch']} | {r['shape']} | {roof['compute_s']:.4f} | "
+                f"{roof['memory_s']:.4f} | {roof['collective_s']:.4f} | "
+                f"**{roof['bottleneck']}** | "
+                f"{ratio:.2f} | {_advice(r)} |" if ratio is not None else
+                f"| {r['arch']} | {r['shape']} | {roof['compute_s']:.4f} | "
+                f"{roof['memory_s']:.4f} | {roof['collective_s']:.4f} | "
+                f"**{roof['bottleneck']}** | n/a | {_advice(r)} |"
+            )
+        fails = {k: v for k, v in results.items() if k.endswith(f"|{mesh}") and not v.get("ok")}
+        if fails:
+            print(f"\nFailed cells ({mesh}):")
+            for k, v in sorted(fails.items()):
+                print(f"  {k}: {v.get('error', '?')[:160]}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -1,0 +1,161 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md
+§Roofline).
+
+  compute term    = device_FLOPs / peak_FLOP/s
+  memory term     = device_bytes / HBM_bw
+  collective term = device_collective_bytes / link_bw
+
+`compiled.cost_analysis()` reports the per-device (SPMD-partitioned)
+module, so dividing by per-chip peaks is equivalent to the
+total/(chips x peak) formulation. Collective bytes are NOT in
+cost_analysis: we parse the optimized HLO and sum operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.
+
+Hardware constants (TPU v5e): 197 bf16 TFLOP/s, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g. "bf16[16,4096,128]{2,1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of output-shape bytes per collective kind in an HLO module.
+
+    We count the op's result shape (for all-reduce == operand bytes; for
+    all-gather the gathered output; for reduce-scatter the pre-scatter
+    input is larger — we conservatively use the larger of result/operand
+    by parsing the full instruction line).
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^(?:ROOT )?%?[\w.\-]+ = (.*)$", s)
+        if not m:
+            continue
+        rest = m.group(1)
+        for kind in _COLLECTIVES:
+            # match "<shape> all-reduce(" or "(shape, shape) all-reduce("
+            km = re.match(r"^(\(?[^=]*?\)?)\s+" + kind + r"(?:-start|-done)?\(", rest)
+            if km:
+                if kind + "-done(" in rest:
+                    break  # -done carries no new bytes; counted at -start
+                out[kind] += _shape_bytes(km.group(1))
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per-device
+    hbm_bytes: float  # per-device
+    coll_bytes: Dict[str, int]  # per-device, by kind
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def __post_init__(self):
+        self.compute_s = self.flops / PEAK_FLOPS
+        self.memory_s = self.hbm_bytes / HBM_BW
+        self.collective_s = sum(self.coll_bytes.values()) / LINK_BW
+
+    @property
+    def total_coll_bytes(self) -> int:
+        return sum(self.coll_bytes.values())
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Lower-bound step time if the three terms overlap perfectly."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": dict(self.coll_bytes),
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def analyze(compiled) -> Roofline:
+    """Trip-count-aware analysis of the optimized HLO.
+
+    NOTE: ``compiled.cost_analysis()`` counts while-loop (lax.scan)
+    bodies ONCE — a scanned-L-layer model under-reports ~L x. We parse
+    the HLO ourselves (launch/hlo_costs.py) and multiply loop bodies by
+    their known_trip_count; the raw XLA numbers are kept alongside for
+    reference.
+    """
+    from repro.launch.hlo_costs import module_costs
+
+    c = module_costs(compiled.as_text())
+    return Roofline(
+        flops=c.flops, hbm_bytes=c.bytes, coll_bytes=dict(c.coll)
+    )
+
+
+def analyze_raw(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {
+        "flops_body_once": float(ca.get("flops", 0.0)),
+        "bytes_body_once": float(ca.get("bytes accessed", 0.0)),
+    }
+
+
+def model_flops(n_active_params: int, tokens: int, kind: str) -> float:
+    """6·N·D for a train step (fwd+bwd); 2·N·D for inference steps."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens

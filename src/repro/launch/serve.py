@@ -1,0 +1,83 @@
+"""Batched serving driver: prefill a batch of prompts, then decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --reduced \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, reduced as reduce_cfg
+from repro.launch.mesh import make_host_mesh
+from repro.models import api
+from repro.train.step import make_decode_step, make_prefill_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--long-ctx", action="store_true", help="CSR window+sink attention")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    mesh = make_host_mesh()
+    key = jax.random.PRNGKey(args.seed)
+    params = api.init_model(cfg, key, jnp.float32)
+    max_len = args.prompt_len + args.gen
+    cache = api.init_cache(cfg, args.batch, max_len, jnp.float32)
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
+    batch = {"tokens": prompts}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (args.batch, cfg.vlm_patches, cfg.d_model)
+        )
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (args.batch, cfg.enc_dec.enc_seq, cfg.d_model)
+        )
+
+    prefill = jax.jit(make_prefill_step(cfg, mesh))
+    decode = jax.jit(make_decode_step(cfg, mesh, long_ctx=args.long_ctx), donate_argnums=(2,))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch, cache)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    print(f"[serve] arch={cfg.name} batch={args.batch}")
+    print(f"[serve] prefill {args.prompt_len} toks: {t_prefill*1e3:.1f} ms")
+    print(
+        f"[serve] decode {args.gen-1} steps: {t_decode*1e3:.1f} ms "
+        f"({t_decode/(args.gen-1)*1e3:.2f} ms/tok)"
+    )
+    print(f"[serve] sample generations: {gen[:, :8].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,64 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation. The dry-run lowers
+against these.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.models import api
+from repro.train.step import TrainState, init_train_state
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeCfg) -> Dict[str, SDS]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": SDS((b, s), jnp.int32),
+        "labels": SDS((b, s), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        p = cfg.vlm_patches
+        out["tokens"] = SDS((b, s - p), jnp.int32)
+        out["patch_embeds"] = SDS((b, p, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        out["frames"] = SDS((b, cfg.enc_dec.enc_seq, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeCfg) -> Dict[str, SDS]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": SDS((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        p = cfg.vlm_patches
+        out["tokens"] = SDS((b, s - p), jnp.int32)
+        out["patch_embeds"] = SDS((b, p, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        out["frames"] = SDS((b, cfg.enc_dec.enc_seq, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def state_specs(cfg: ArchConfig, dtype=jnp.bfloat16) -> TrainState:
+    return jax.eval_shape(
+        lambda k: init_train_state(cfg, k, dtype), jax.random.PRNGKey(0)
+    )
+
+
+def params_specs(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda k: api.init_model(cfg, k, dtype), jax.random.PRNGKey(0)
+    )
+
+
+def cache_specs_abstract(cfg: ArchConfig, batch: int, max_len: int,
+                         dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: api.init_cache(cfg, batch, max_len, dtype))
+
+
+def decode_token_specs(batch: int) -> SDS:
+    return SDS((batch, 1), jnp.int32)

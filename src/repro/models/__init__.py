@@ -1,0 +1,2 @@
+"""Model zoo: decoder-only LMs (dense GQA / MLA / MoE / SSM / hybrid),
+encoder-decoder (whisper), VLM-backbone, and the paper's GNNs."""

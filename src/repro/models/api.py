@@ -1,0 +1,41 @@
+"""Family dispatch: one entry point per model operation, covering every
+assigned architecture."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, transformer
+
+
+def init_model(cfg: ArchConfig, key, dtype) -> Dict:
+    if cfg.family == "audio":
+        return encdec.init_encdec(cfg, key, dtype)
+    return transformer.init_lm(cfg, key, dtype)
+
+
+def forward(params, batch: Dict, cfg: ArchConfig, mesh=None) -> jax.Array:
+    if cfg.family == "audio":
+        return encdec.encdec_forward(params, batch, cfg, mesh)
+    return transformer.lm_forward(params, batch, cfg, mesh)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> Dict:
+    if cfg.family == "audio":
+        return encdec.init_encdec_cache(cfg, batch, max_len, dtype)
+    return transformer.init_lm_cache(cfg, batch, max_len, dtype)
+
+
+def prefill(params, batch: Dict, cfg: ArchConfig, cache, mesh=None):
+    if cfg.family == "audio":
+        return encdec.encdec_prefill(params, batch, cfg, cache, mesh)
+    return transformer.lm_prefill(params, batch, cfg, cache, mesh)
+
+
+def decode_step(params, tokens, cfg: ArchConfig, cache, mesh=None,
+                long_ctx: bool = False):
+    if cfg.family == "audio":
+        return encdec.encdec_decode_step(params, tokens, cfg, cache, mesh)
+    return transformer.lm_decode_step(params, tokens, cfg, cache, mesh, long_ctx)

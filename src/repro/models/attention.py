@@ -1,0 +1,435 @@
+"""Attention variants: GQA (optional qk-norm / qkv-bias / local window),
+MLA (DeepSeek-V2), and sliding-window+sink "CSR attention" for
+long-context decode (the paper's SDDMM->softmax->SpMM pipeline expressed
+as a banded-sparse attention; DESIGN.md §3).
+
+KV cache layout: {"k": (B, L, Hkv, Dh), "v": (B, L, Hkv, Dh), "pos": i32[]}.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.modules import apply_rope, dense_init, linear, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------ GQA params
+def init_gqa(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], d, h * dh, dtype),
+        "wk": dense_init(ks[1], d, hkv * dh, dtype),
+        "wv": dense_init(ks[2], d, hkv * dh, dtype),
+        "wo": dense_init(ks[3], h * dh, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), dtype)
+        p["k_norm"] = jnp.zeros((dh,), dtype)
+    return p
+
+
+def _qkv(params, x, cfg: ArchConfig, positions):
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = linear(x, params["wq"], params.get("bq")).reshape(b, s, h, dh)
+    k = linear(x, params["wk"], params.get("bk")).reshape(b, s, hkv, dh)
+    v = linear(x, params["wv"], params.get("bv")).reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+import os as _os
+
+
+def _sdpa(q, k, v, mask, scale) -> jax.Array:
+    """q: (B,S,H,Dh); k/v: (B,L,Hkv,Dh); mask: (B,1,S,L) or (1,1,S,L)."""
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, dh)
+    logits = jnp.einsum("bshgd,blhd->bhgsl", qg.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale + mask[:, :, None]
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgsl,blhd->bshgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, h * dh)
+
+
+def _sdpa_causal_chunked(q, k, v, scale, window=None, q_chunk=1024) -> jax.Array:
+    """Blockwise-causal attention for the XLA path (§Perf optimization).
+
+    Structural savings vs. the naive _sdpa (both HLO-measurable):
+      * fully-masked (q,k) blocks above the diagonal are never computed
+        -> ~2x fewer score bytes/FLOPs for causal training;
+      * scores and probs stay bf16 (max-subtracted, in [0,1]) with an
+        f32 softmax denominator -> 2x fewer bytes than f32 scores.
+    This is the XLA-expressible half of what the Pallas flash kernel
+    does on TPU (the kernel also keeps scores in VMEM entirely).
+    Enabled with REPRO_ATTN=chunked (default after hillclimb; the
+    paper-faithful baseline keeps the naive path — see EXPERIMENTS.md).
+    """
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qc = min(q_chunk, s)
+    n_chunks = -(-s // qc)
+    qg = q.reshape(b, s, hkv, g, dh)
+    outs = []
+    for i in range(n_chunks):
+        q_i = qg[:, i * qc : (i + 1) * qc]
+        sc = q_i.shape[1]
+        hi = min((i + 1) * qc, s)  # causal horizon for this chunk
+        lo = 0 if window is None else max(0, hi - sc - window)
+        k_i = k[:, lo:hi]
+        v_i = v[:, lo:hi]
+        logits = jnp.einsum(
+            "bshgd,blhd->bhgsl", q_i, k_i, preferred_element_type=jnp.float32
+        ) * scale
+        qpos = (i * qc + jnp.arange(sc))[:, None]
+        kpos = (lo + jnp.arange(hi - lo))[None, :]
+        ok = kpos <= qpos
+        if window is not None:
+            ok &= kpos > qpos - window
+        logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp((logits - m).astype(q.dtype))  # bf16 probs in [0,1]
+        denom = jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
+        o = jnp.einsum("bhgsl,blhd->bshgd", p, v_i.astype(p.dtype))
+        d_bshg = jnp.maximum(denom[..., 0], 1e-30).transpose(0, 3, 1, 2)
+        o = o / d_bshg.astype(o.dtype)[..., None]
+        outs.append(o.reshape(b, sc, h * dh))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _use_chunked() -> bool:
+    return _os.environ.get("REPRO_ATTN", "naive") == "chunked"
+
+
+def causal_mask(s: int, l: int, window: Optional[int] = None) -> jax.Array:
+    """(1, 1, S, L) additive mask; queries occupy the last s of l positions."""
+    qpos = jnp.arange(s)[:, None] + (l - s)
+    kpos = jnp.arange(l)[None, :]
+    ok = kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF)[None, None]
+
+
+def gqa_attention(
+    params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    positions: jax.Array,
+    cache: Optional[Dict] = None,
+    window: Optional[int] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full (or banded) causal attention; updates cache when given."""
+    b, s, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q, k, v = _qkv(params, x, cfg, positions)
+    scale = 1.0 / dh**0.5
+    if cache is not None:
+        pos = cache["pos"]
+        k_all = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        l = k_all.shape[1]
+        if _use_chunked() and s > 1 and l == s:
+            # prefill that fills the whole cache: queries end at the
+            # cache end, so the blockwise-causal path applies exactly
+            out = _sdpa_causal_chunked(q, k_all, v_all, scale, window)
+        else:
+            qpos = pos + jnp.arange(s)[:, None]
+            kpos = jnp.arange(l)[None, :]
+            ok = kpos <= qpos
+            if window is not None:
+                ok &= kpos > qpos - window
+            mask = jnp.where(ok, 0.0, NEG_INF)[None, None]
+            out = _sdpa(q, k_all, v_all, mask, scale)
+        new_cache = {"k": k_all, "v": v_all, "pos": pos + s}
+    else:
+        if _use_chunked() and s > 1:
+            out = _sdpa_causal_chunked(q, k, v, scale, window)
+        else:
+            mask = causal_mask(s, s, window)
+            out = _sdpa(q, k, v, mask, scale)
+        new_cache = None
+    return linear(out, params["wo"]), new_cache
+
+
+# ------------------------------------------ CSR (window+sink) attention
+def csr_window_attention(
+    params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    positions: jax.Array,
+    cache: Dict,
+) -> Tuple[jax.Array, Dict]:
+    """Long-context decode through the paper's CSR-attention pattern:
+    each query attends to `long_sinks` global sink tokens plus a
+    `long_window` sliding window — the sliding_window_csr pattern of
+    sparse/generators.py, evaluated as dense tiles over the gathered
+    band (SDDMM -> softmax -> SpMM on the banded CSR). O(window+sinks)
+    per token instead of O(L): the sub-quadratic path that makes
+    `long_500k` runnable for every architecture.
+    """
+    b, s, _ = x.shape
+    assert s == 1, "csr_window_attention is a decode step"
+    dh = cfg.resolved_head_dim
+    q, k, v = _qkv(params, x, cfg, positions)
+    pos = cache["pos"]
+    k_all = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    v_all = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    w = min(cfg.long_window, k_all.shape[1])
+    g = min(cfg.long_sinks, k_all.shape[1])
+    # gather the banded columns: sinks [0:g] + window ending at pos
+    start = jnp.clip(pos - (w - 1), 0, k_all.shape[1] - w)
+    k_win = jax.lax.dynamic_slice_in_dim(k_all, start, w, axis=1)
+    v_win = jax.lax.dynamic_slice_in_dim(v_all, start, w, axis=1)
+    k_sink = k_all[:, :g]
+    v_sink = v_all[:, :g]
+    k_band = jnp.concatenate([k_sink, k_win], axis=1)  # (B, g+w, Hkv, Dh)
+    v_band = jnp.concatenate([v_sink, v_win], axis=1)
+    # validity mask: window positions must be <= pos (and distinct from sinks)
+    kpos_win = start + jnp.arange(w)
+    ok_win = (kpos_win <= pos) & (kpos_win >= g)
+    ok = jnp.concatenate([jnp.ones((g,), bool), ok_win])
+    mask = jnp.where(ok, 0.0, NEG_INF)[None, None, None, :]
+    out = _sdpa(q, k_band, v_band, mask, 1.0 / dh**0.5)
+    return linear(out, params["wo"]), {"k": k_all, "v": v_all, "pos": pos + 1}
+
+
+def csr_window_attention_sharded(
+    params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    positions: jax.Array,
+    cache: Dict,
+    mesh,
+) -> Tuple[jax.Array, Dict]:
+    """§Perf: distribution-aware CSR window+sink attention.
+
+    The naive path dynamic-slices a [pos-w, pos] band out of a KV cache
+    whose length dim is sharded over ('data','model') — SPMD cannot prove
+    locality, so it all-gathers the entire 500k-token cache per decode
+    step (measured: ~10-25 s memory term per token for the dense archs).
+
+    Here each shard keeps its cache slice local: it computes masked
+    logits for its own positions (the CSR band pattern evaluated
+    shard-locally), then a flash-style global softmax combine via
+    pmax/psum of (stats, partial outputs). No cache movement at all —
+    collective traffic is O(B*H*D), independent of context length.
+    REPRO_LONG_ATTN=sharded enables it; the paper-faithful naive path is
+    the baseline.
+    """
+    b, s, _ = x.shape
+    assert s == 1
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = h // hkv
+    w, sinks = cfg.long_window, cfg.long_sinks
+    scale = 1.0 / dh**0.5
+    q, k_new, v_new = _qkv(params, x, cfg, positions)
+    pos = cache["pos"]
+    from jax.sharding import PartitionSpec as P
+
+    seq_axes = tuple(a for a in ("data", "model") if a in mesh.shape)
+    l_total = cache["k"].shape[1]
+
+    def local(q, k_new, v_new, k_loc, v_loc, pos):
+        # k_loc: (B, L_loc, Hkv, Dh) — this shard's slice of the cache
+        l_loc = k_loc.shape[1]
+        idx = jnp.zeros((), jnp.int32)
+        mul = 1
+        for a in reversed(seq_axes):
+            idx = idx + jax.lax.axis_index(a) * mul
+            mul *= mesh.shape[a]
+        offset = idx * l_loc
+        kpos = offset + jnp.arange(l_loc)
+        # write the new token's K/V if it lands in this shard — via a
+        # 1-slot dynamic_update_slice (aliases the donated cache buffer)
+        # instead of a whole-slice where() rewrite (§Perf iteration 2)
+        in_range = (pos >= offset) & (pos < offset + l_loc)
+        li = jnp.clip(pos - offset, 0, l_loc - 1)
+        old_k = jax.lax.dynamic_slice(k_loc, (0, li, 0, 0), (b, 1, hkv, dh))
+        old_v = jax.lax.dynamic_slice(v_loc, (0, li, 0, 0), (b, 1, hkv, dh))
+        k_loc = jax.lax.dynamic_update_slice(
+            k_loc,
+            jnp.where(in_range, k_new.astype(k_loc.dtype), old_k),
+            (0, li, 0, 0),
+        )
+        v_loc = jax.lax.dynamic_update_slice(
+            v_loc,
+            jnp.where(in_range, v_new.astype(v_loc.dtype), old_v),
+            (0, li, 0, 0),
+        )
+        # CSR band: sinks + sliding window, shard-local evaluation
+        valid = (kpos <= pos) & ((kpos > pos - w) | (kpos < sinks))
+        qg = q.reshape(b, 1, hkv, g, dh).astype(jnp.float32)
+        logits = jnp.einsum(
+            "bshgd,blhd->bhgsl", qg, k_loc.astype(jnp.float32)
+        ) * scale
+        logits = jnp.where(valid[None, None, None, None, :], logits, -jnp.inf)
+        m_loc = jnp.max(logits, axis=-1, keepdims=True)
+        m = m_loc
+        for a in seq_axes:
+            m = jax.lax.pmax(m, a)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.exp(logits - m_safe) * valid[None, None, None, None, :]
+        l_sum = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bhgsl,blhd->bshgd", p, v_loc.astype(jnp.float32))
+        stats = jnp.concatenate(
+            [o.reshape(b, 1, h, dh), jnp.broadcast_to(
+                l_sum.reshape(b, 1, h, 1), (b, 1, h, 1))], axis=-1
+        )
+        stats = jax.lax.psum(stats, seq_axes)
+        out = stats[..., :dh] / jnp.maximum(stats[..., dh:], 1e-30)
+        return out.reshape(b, 1, h * dh).astype(x.dtype), k_loc, v_loc
+
+    kv_spec = P(None, seq_axes, None, None)
+    out, k_all, v_all = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), kv_spec, kv_spec, P()),
+        out_specs=(P(), kv_spec, kv_spec),
+        check_vma=False,
+    )(q, k_new, v_new, cache["k"], cache["v"], pos)
+    return linear(out, params["wo"]), {"k": k_all, "v": v_all, "pos": pos + 1}
+
+
+# ----------------------------------------------------------------- MLA
+def init_mla(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, h * qk_dim, dtype),
+        "w_dkv": dense_init(ks[1], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+        "w_uk": dense_init(ks[2], m.kv_lora_rank, h * m.qk_nope_head_dim, dtype),
+        "w_uv": dense_init(ks[3], m.kv_lora_rank, h * m.v_head_dim, dtype),
+        "wo": dense_init(ks[4], h * m.v_head_dim, d, dtype),
+    }
+
+
+def mla_attention(
+    params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    positions: jax.Array,
+    cache: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Multi-head Latent Attention (DeepSeek-V2). The cache stores the
+    compressed latent c_kv (rank 512) + the shared rope key — the
+    memory saving that defines MLA."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = linear(x, params["wq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = linear(x, params["w_dkv"])  # (B,S,rank+dr)
+    c_kv, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank :]
+    c_kv = rmsnorm(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,dr)
+
+    if cache is not None:
+        pos = cache["pos"]
+        c_all = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0)
+        )
+        kr_all = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope[:, :, 0].astype(cache["k_rope"].dtype), (0, pos, 0)
+        )
+        l = c_all.shape[1]
+        qpos = pos + jnp.arange(s)[:, None]
+        new_cache = {"c_kv": c_all, "k_rope": kr_all, "pos": pos + s}
+    else:
+        c_all, kr_all = c_kv, k_rope[:, :, 0]
+        l = s
+        qpos = jnp.arange(s)[:, None]
+        new_cache = None
+
+    if cache is not None and _os.environ.get("REPRO_MLA_ABSORB") == "1":
+        # §Perf: MLA weight absorption (DeepSeek-V2 §2.1). The naive path
+        # re-decompresses K/V = c_kv @ W_uk/W_uv over the WHOLE cache per
+        # decode step (O(L·H·(dn+dv)) flops + a (B,L,H,dn) transient).
+        # Absorbed: fold W_uk into the query and W_uv into the output —
+        # attention runs directly in the rank-512 latent space,
+        # O(L·rank) per head-group with no decompressed tensors.
+        return _mla_absorbed(
+            params, q_nope, q_rope, c_all, kr_all, qpos, cfg, new_cache, x
+        )
+
+    k_nope = linear(c_all, params["w_uk"]).reshape(b, l, h, dn)
+    v = linear(c_all, params["w_uv"]).reshape(b, l, h, dv)
+
+    scale = 1.0 / (dn + dr) ** 0.5
+    logits = (
+        jnp.einsum("bshd,blhd->bhsl", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
+        + jnp.einsum("bshd,bld->bhsl", q_rope.astype(jnp.float32), kr_all.astype(jnp.float32))
+    ) * scale
+    kpos = jnp.arange(l)[None, :]
+    mask = jnp.where(kpos <= qpos, 0.0, NEG_INF)[None, None]
+    probs = jax.nn.softmax(logits + mask, axis=-1)
+    out = jnp.einsum("bhsl,blhd->bshd", probs.astype(v.dtype), v).reshape(b, s, h * dv)
+    return linear(out, params["wo"]), new_cache
+
+
+def _mla_absorbed(params, q_nope, q_rope, c_all, kr_all, qpos, cfg, new_cache, x):
+    """Absorbed-weight MLA attention over the latent cache."""
+    m = cfg.mla
+    b, s, h, dn = q_nope.shape
+    dv = m.v_head_dim
+    l = c_all.shape[1]
+    scale = 1.0 / (dn + m.qk_rope_head_dim) ** 0.5
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, dn)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, dv)
+    # fold W_uk into q: (B,S,H,dn) x (r,H,dn) -> (B,S,H,r)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    logits = (
+        jnp.einsum("bshr,blr->bhsl", q_lat, c_all.astype(jnp.float32))
+        + jnp.einsum("bshd,bld->bhsl", q_rope.astype(jnp.float32),
+                     kr_all.astype(jnp.float32))
+    ) * scale
+    kpos = jnp.arange(l)[None, :]
+    mask = jnp.where(kpos <= qpos, 0.0, NEG_INF)[None, None]
+    probs = jax.nn.softmax(logits + mask, axis=-1)
+    # attend in latent space, then fold W_uv into the output
+    o_lat = jnp.einsum("bhsl,blr->bshr", probs, c_all.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(b, s, h * dv).astype(x.dtype)
+    return linear(out, params["wo"]), new_cache
+
+
+# -------------------------------------------------------- cache builders
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict:
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    if cfg.mla:
+        m = cfg.mla
+        return {
+            "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, hkv, dh), dtype),
+        "v": jnp.zeros((batch, max_len, hkv, dh), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

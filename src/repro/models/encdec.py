@@ -1,0 +1,219 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv frontend is a STUB per the assignment: `input_specs()` provides
+precomputed frame embeddings (B, enc_seq, D) — the transformer backbone
+(bidirectional encoder + causal decoder with cross-attention) is real.
+Whisper uses LayerNorm + GELU MLP + learned absolute positions.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.modules import dense_init, gelu_mlp, init_gelu_mlp, layernorm
+
+NEG_INF = -1e30
+
+
+def _init_mha(key, d: int, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, d, dtype),
+        "bq": jnp.zeros((d,), dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "bv": jnp.zeros((d,), dtype),
+        "wo": dense_init(ks[3], d, d, dtype),
+        "bo": jnp.zeros((d,), dtype),
+    }
+
+
+def _mha(p, xq, xkv, n_heads: int, mask=None):
+    b, s, d = xq.shape
+    l = xkv.shape[1]
+    dh = d // n_heads
+    q = (xq @ p["wq"].astype(xq.dtype) + p["bq"]).reshape(b, s, n_heads, dh)
+    k = (xkv @ p["wk"].astype(xq.dtype)).reshape(b, l, n_heads, dh)
+    v = (xkv @ p["wv"].astype(xq.dtype) + p["bv"]).reshape(b, l, n_heads, dh)
+    logits = jnp.einsum("bshd,blhd->bhsl", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits / dh**0.5
+    if mask is not None:
+        logits = logits + mask
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhsl,blhd->bshd", probs.astype(v.dtype), v).reshape(b, s, d)
+    return out @ p["wo"].astype(out.dtype) + p["bo"]
+
+
+def _init_ln(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _init_enc_layer(key, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "ln1": _init_ln(d, dtype),
+        "attn": _init_mha(k1, d, dtype),
+        "ln2": _init_ln(d, dtype),
+        "mlp": init_gelu_mlp(k2, d, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ArchConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln1": _init_ln(d, dtype),
+        "self_attn": _init_mha(k1, d, dtype),
+        "ln_x": _init_ln(d, dtype),
+        "cross_attn": _init_mha(k2, d, dtype),
+        "ln2": _init_ln(d, dtype),
+        "mlp": init_gelu_mlp(k3, d, cfg.d_ff, dtype),
+    }
+
+
+def init_encdec(cfg: ArchConfig, key, dtype=jnp.float32) -> Dict:
+    ed = cfg.enc_dec
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], ed.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "enc_pos": (jax.random.normal(ks[2], (ed.enc_seq, d)) * 0.01).astype(dtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys),
+        "enc_ln": _init_ln(d, dtype),
+        "embed": (jax.random.normal(ks[3], (cfg.vocab, d)) * 0.02).astype(dtype),
+        "dec_pos": (jax.random.normal(ks[4], (448 * 128, d)) * 0.01).astype(dtype),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(dec_keys),
+        "dec_ln": _init_ln(d, dtype),
+    }
+
+
+def encode(params, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """frames: precomputed conv-frontend embeddings (B, Se, D) [stub]."""
+    x = frames + params["enc_pos"][None, : frames.shape[1]].astype(frames.dtype)
+
+    def body(x, lp):
+        h = layernorm(x, lp["ln1"]["w"], lp["ln1"]["b"])
+        x = x + _mha(lp["attn"], h, h, cfg.n_heads)
+        h = layernorm(x, lp["ln2"]["w"], lp["ln2"]["b"])
+        return x + gelu_mlp(lp["mlp"], h), None
+
+    x, _ = jax.lax.scan(
+        jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable),
+        x,
+        params["enc_layers"],
+    )
+    return layernorm(x, params["enc_ln"]["w"], params["enc_ln"]["b"])
+
+
+def decode_train(
+    params, tokens: jax.Array, enc_out: jax.Array, cfg: ArchConfig
+) -> jax.Array:
+    """Teacher-forced decoder. tokens: (B, S) -> logits (B, S, V)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["dec_pos"][None, :s].astype(
+        params["embed"].dtype
+    )
+    causal = jnp.where(
+        jnp.arange(s)[None, :] <= jnp.arange(s)[:, None], 0.0, NEG_INF
+    )[None, None]
+
+    def body(x, lp):
+        h = layernorm(x, lp["ln1"]["w"], lp["ln1"]["b"])
+        x = x + _mha(lp["self_attn"], h, h, cfg.n_heads, causal)
+        h = layernorm(x, lp["ln_x"]["w"], lp["ln_x"]["b"])
+        x = x + _mha(lp["cross_attn"], h, enc_out, cfg.n_heads)
+        h = layernorm(x, lp["ln2"]["w"], lp["ln2"]["b"])
+        return x + gelu_mlp(lp["mlp"], h), None
+
+    x, _ = jax.lax.scan(
+        jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable),
+        x,
+        params["dec_layers"],
+    )
+    x = layernorm(x, params["dec_ln"]["w"], params["dec_ln"]["b"])
+    return (x @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+
+
+def encdec_forward(params, batch: Dict, cfg: ArchConfig, mesh=None) -> jax.Array:
+    enc_out = encode(params, batch["frames"], cfg)
+    return decode_train(params, batch["tokens"], enc_out, cfg)
+
+
+# --------------------------------------------------------------- serving
+def init_encdec_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    n = cfg.n_layers
+    return {
+        "k": jnp.zeros((n, batch, max_len, d), dtype),
+        "v": jnp.zeros((n, batch, max_len, d), dtype),
+        "enc_out": jnp.zeros((batch, cfg.enc_dec.enc_seq, d), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def encdec_prefill(params, batch: Dict, cfg: ArchConfig, cache: Dict, mesh=None):
+    """Encode audio + teacher-force the prompt tokens into the KV cache."""
+    enc_out = encode(params, batch["frames"], cfg)
+    cache = dict(cache, enc_out=enc_out.astype(cache["enc_out"].dtype))
+    logits, cache = _dec_steps(params, batch["tokens"], cfg, cache)
+    return logits[:, -1:], cache
+
+
+def encdec_decode_step(params, tokens: jax.Array, cfg: ArchConfig, cache: Dict,
+                       mesh=None, long_ctx: bool = False):
+    return _dec_steps(params, tokens, cfg, cache)
+
+
+def _dec_steps(params, tokens, cfg: ArchConfig, cache):
+    b, s = tokens.shape
+    d = cfg.d_model
+    dh = d // cfg.n_heads
+    pos0 = cache["pos"]
+    x = params["embed"][tokens] + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], pos0, s, 0
+    )[None].astype(params["embed"].dtype)
+    enc_out = cache["enc_out"]
+    l = cache["k"].shape[2]
+
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["dec_layers"])
+        h = layernorm(x, lp["ln1"]["w"], lp["ln1"]["b"])
+        # append this step's self-attn kv
+        k_new = h @ lp["self_attn"]["wk"].astype(h.dtype)
+        v_new = h @ lp["self_attn"]["wv"].astype(h.dtype) + lp["self_attn"]["bv"]
+        k_all = jax.lax.dynamic_update_slice(
+            cache["k"][i], k_new.astype(cache["k"].dtype), (0, pos0, 0)
+        )
+        v_all = jax.lax.dynamic_update_slice(
+            cache["v"][i], v_new.astype(cache["v"].dtype), (0, pos0, 0)
+        )
+        new_k.append(k_all)
+        new_v.append(v_all)
+        qpos = pos0 + jnp.arange(s)[:, None]
+        mask = jnp.where(jnp.arange(l)[None, :] <= qpos, 0.0, NEG_INF)[None, None]
+        q = (h @ lp["self_attn"]["wq"].astype(h.dtype) + lp["self_attn"]["bq"]).reshape(
+            b, s, cfg.n_heads, dh
+        )
+        kk = k_all.reshape(b, l, cfg.n_heads, dh)
+        vv = v_all.reshape(b, l, cfg.n_heads, dh)
+        logits = jnp.einsum("bshd,blhd->bhsl", q.astype(jnp.float32), kk.astype(jnp.float32)) / dh**0.5
+        probs = jax.nn.softmax(logits + mask, axis=-1)
+        o = jnp.einsum("bhsl,blhd->bshd", probs.astype(vv.dtype), vv).reshape(b, s, d)
+        x = x + (o @ lp["self_attn"]["wo"].astype(o.dtype) + lp["self_attn"]["bo"])
+        h = layernorm(x, lp["ln_x"]["w"], lp["ln_x"]["b"])
+        x = x + _mha(lp["cross_attn"], h, enc_out.astype(h.dtype), cfg.n_heads)
+        h = layernorm(x, lp["ln2"]["w"], lp["ln2"]["b"])
+        x = x + gelu_mlp(lp["mlp"], h)
+
+    x = layernorm(x, params["dec_ln"]["w"], params["dec_ln"]["b"])
+    logits = (x @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+    cache = dict(
+        cache, k=jnp.stack(new_k), v=jnp.stack(new_v), pos=pos0 + s
+    )
+    return logits, cache

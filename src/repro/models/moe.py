@@ -1,0 +1,251 @@
+"""Mixture-of-Experts FFN.
+
+Two execution paths, selected by whether a mesh is supplied:
+
+* ``moe_ffn_ref`` — single-device sort + ragged_dot (also the oracle).
+* ``moe_ffn_ep``  — expert-parallel shard_map: experts sharded over the
+  'data' axis (EP), expert hidden dim over 'model' (TP); fixed-capacity
+  all_to_all dispatch/return, second sort for ragged_dot grouping, psum
+  over 'model' for the down-projection. Overflowing tokens are dropped
+  (capacity_factor, standard Switch-style bound) — recorded in telemetry.
+
+MoE dispatch is itself a sparse aggregation (DESIGN.md §3): the dispatch
+variant ("sorted_ragged" here vs. dense one-hot einsum for tiny E) is an
+AutoSAGE-schedulable choice; see core/registry integration in moe_sched.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.modules import dense_init, init_swiglu, swiglu
+
+
+def init_moe(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    mo = cfg.moe
+    d, e, fe = cfg.d_model, mo.n_experts, mo.d_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router in f32
+        "w_gate": (jax.random.normal(ks[1], (e, d, fe)) * (1 / d) ** 0.5).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, fe)) * (1 / d) ** 0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, fe, d)) * (1 / fe) ** 0.5).astype(dtype),
+    }
+    if mo.n_shared:
+        p["shared"] = init_swiglu(ks[4], d, mo.n_shared * fe, dtype)
+    return p
+
+
+def _route(t: jax.Array, router: jax.Array, top_k: int):
+    """t: (T, D) -> (gates (T,k) f32, ids (T,k) i32). Softmax-then-top-k
+    with renormalization (qwen3-style norm_topk_prob)."""
+    logits = t.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, ids
+
+
+def _expert_compute(xs, gs, w_gate, w_up, w_down):
+    """xs: (M, D) sorted by group; gs: (E,) group sizes."""
+    h = jax.nn.silu(jax.lax.ragged_dot(xs, w_gate, gs).astype(jnp.float32))
+    u = jax.lax.ragged_dot(xs, w_up, gs).astype(jnp.float32)
+    return jax.lax.ragged_dot((h * u).astype(xs.dtype), w_down, gs)
+
+
+def dispatch_variant(cfg: ArchConfig, n_tokens: int) -> str:
+    """Input-aware dispatch choice (the AutoSAGE idea applied to MoE,
+    DESIGN.md §3): token->expert dispatch is a sparse aggregation.
+
+      sorted_ragged : sort token copies by expert + grouped (ragged)
+                      GEMMs. Amortizes when there are many tokens.
+      dense_onehot  : every expert processes every token, combined by the
+                      (T, E) gate matrix. k/E of the FLOPs are useful,
+                      but there is no sort/scatter/gather — wins for tiny
+                      decode batches where dispatch overhead dominates.
+
+    Roofline-style switch: dense costs T*E/topk more expert FLOPs;
+    sorted costs ~5 gather/scatter passes over T*topk rows.
+    """
+    mo = cfg.moe
+    dense_flops = 6.0 * n_tokens * mo.n_experts * cfg.d_model * mo.d_expert
+    sorted_flops = 6.0 * n_tokens * mo.top_k * cfg.d_model * mo.d_expert
+    sorted_overhead = 5.0 * n_tokens * mo.top_k * cfg.d_model * 40  # bytes-ish
+    return "dense_onehot" if dense_flops < sorted_flops + sorted_overhead else "sorted_ragged"
+
+
+def moe_ffn_ref(
+    params: Dict, x: jax.Array, cfg: ArchConfig, variant: str = "auto"
+) -> jax.Array:
+    """Single-device MoE with an input-aware dispatch variant."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    t = x.reshape(-1, d)
+    n = t.shape[0]
+    if variant == "auto":
+        variant = dispatch_variant(cfg, n)
+    gates, ids = _route(t, params["router"], mo.top_k)
+    if variant == "dense_onehot":
+        # (T, E) combine matrix with the top-k gates scattered in
+        comb = jnp.zeros((n, mo.n_experts), jnp.float32)
+        comb = comb.at[jnp.arange(n)[:, None], ids].set(gates)
+        h = jax.nn.silu(jnp.einsum("td,edf->tef", t.astype(jnp.float32), params["w_gate"]))
+        u = jnp.einsum("td,edf->tef", t.astype(jnp.float32), params["w_up"])
+        y_all = jnp.einsum("tef,efd->ted", h * u, params["w_down"])
+        out = jnp.einsum("te,ted->td", comb, y_all)
+    else:
+        eflat = ids.reshape(-1)  # (n*k,)
+        order = jnp.argsort(eflat)
+        xs = t[order // mo.top_k]
+        gs = jnp.bincount(eflat, length=mo.n_experts)
+        y = _expert_compute(xs, gs, params["w_gate"], params["w_up"], params["w_down"])
+        contrib = y.astype(jnp.float32) * gates.reshape(-1)[order][:, None]
+        out = jax.ops.segment_sum(contrib, order // mo.top_k, num_segments=n)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    if mo.n_shared:
+        out = out + swiglu(params["shared"], x)
+    return out
+
+
+# ------------------------------------------------------------------- EP
+def moe_param_specs(cfg: ArchConfig, data_axis="data", model_axis="model") -> Dict:
+    """PartitionSpecs for EP: experts over 'data', expert-hidden over
+    'model'; router replicated; shared experts TP over 'model'."""
+    specs = {
+        "router": P(None, None),
+        "w_gate": P(data_axis, None, model_axis),
+        "w_up": P(data_axis, None, model_axis),
+        "w_down": P(data_axis, model_axis, None),
+    }
+    if cfg.moe and cfg.moe.n_shared:
+        specs["shared"] = {
+            "w_gate": P(None, model_axis),
+            "w_up": P(None, model_axis),
+            "w_down": P(model_axis, None),
+        }
+    return specs
+
+
+def moe_ffn_ep(
+    params: Dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    mesh: jax.sharding.Mesh,
+    capacity_factor: float = 1.25,
+    data_axis: str = "data",
+    model_axis: str = "model",
+    batch_axes: Optional[Tuple[str, ...]] = None,
+) -> jax.Array:
+    """Expert-parallel MoE forward (see module docstring)."""
+    mo = cfg.moe
+    n_data = mesh.shape[data_axis]
+    e_loc = mo.n_experts // n_data
+    assert e_loc * n_data == mo.n_experts, (mo.n_experts, n_data)
+    if batch_axes is None:
+        # largest prefix of ('pod', data_axis) dividing the batch; falls
+        # back to replicated tokens (decode with tiny batches)
+        batch_axes = ()
+        size = 1
+        for a in ("pod", data_axis):
+            if a in mesh.shape and x.shape[0] % (size * mesh.shape[a]) == 0:
+                batch_axes += (a,)
+                size *= mesh.shape[a]
+    batch_spec = batch_axes if batch_axes else None
+
+    def local(router, w_gate, w_up, w_down, xl):
+        # xl: (B_loc, S, D) local tokens; weights local shards
+        b_loc, s, d = xl.shape
+        t = xl.reshape(-1, d)
+        n = t.shape[0]
+        k = mo.top_k
+        gates, ids = _route(t, router, k)
+        eflat = ids.reshape(-1)
+        gflat = gates.reshape(-1)
+        order = jnp.argsort(eflat)
+        e_sorted = eflat[order]
+        tok_sorted = order // k
+        dest = e_sorted // e_loc  # destination data-shard
+        cap = int(np.ceil(n * k / n_data * capacity_factor))
+        # slot within destination block (dest is sorted since e_sorted is)
+        idx_in_dest = jnp.arange(n * k) - jnp.searchsorted(dest, dest)
+        keep = idx_in_dest < cap
+        slot = jnp.where(keep, idx_in_dest, cap - 1)
+
+        send_x = jnp.zeros((n_data, cap, d), xl.dtype)
+        send_e = jnp.full((n_data, cap), e_loc, jnp.int32)  # pad expert id
+        send_x = send_x.at[dest, slot].set(
+            jnp.where(keep[:, None], t[tok_sorted], 0.0).astype(xl.dtype)
+        )
+        send_e = send_e.at[dest, slot].set(
+            jnp.where(keep, e_sorted % e_loc, e_loc).astype(jnp.int32)
+        )
+
+        recv_x = jax.lax.all_to_all(send_x, data_axis, 0, 0, tiled=True)
+        recv_e = jax.lax.all_to_all(send_e, data_axis, 0, 0, tiled=True)
+
+        # group received tokens by local expert (pad id e_loc sorts last)
+        rx = recv_x.reshape(-1, d)
+        re = recv_e.reshape(-1)
+        order2 = jnp.argsort(re)
+        xs = rx[order2]
+        gs = jnp.bincount(re[order2], length=e_loc + 1)[:e_loc]
+        y = _expert_compute(xs, gs, w_gate, w_up, w_down)
+        if os.environ.get("REPRO_MOE_COMPACT") == "1":
+            # bf16 partial-sum exchange over the TP axis (each partial is
+            # an Fe/16 slice of one expert's output; f32 accumulation of
+            # 16 bf16 partials — flash-kernel-standard precision)
+            y = y.astype(xl.dtype)
+        y = jax.lax.psum(y, model_axis)  # TP over expert hidden dim
+        # unsort back to (n_data, cap, D) and return to senders.
+        # REPRO_MOE_COMPACT=1 (§Perf): return-path buffers in bf16 —
+        # halves the all_to_all return bytes and the transient buffers;
+        # the gate-weighted combine still accumulates in f32.
+        back_dt = (
+            xl.dtype if os.environ.get("REPRO_MOE_COMPACT") == "1"
+            else jnp.float32
+        )
+        y_back = jnp.zeros((n_data * cap, d), back_dt).at[order2].set(
+            y.astype(back_dt)
+        )
+        back = jax.lax.all_to_all(
+            y_back.reshape(n_data, cap, d), data_axis, 0, 0, tiled=True
+        ).astype(jnp.float32)
+        # combine: token copy at (dest, slot) belongs to sorted position i
+        contrib = back[dest, slot] * jnp.where(keep, gflat[order], 0.0)[:, None]
+        out = jax.ops.segment_sum(contrib, tok_sorted, num_segments=n)
+        return out.reshape(b_loc, s, d).astype(xl.dtype)
+
+    specs = moe_param_specs(cfg, data_axis, model_axis)
+    out = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            specs["router"],
+            specs["w_gate"],
+            specs["w_up"],
+            specs["w_down"],
+            P(batch_spec, None, None),
+        ),
+        out_specs=P(batch_spec, None, None),
+        check_vma=False,
+    )(params["router"], params["w_gate"], params["w_up"], params["w_down"], x)
+    if mo.n_shared:
+        out = out + swiglu(params["shared"], x)
+    return out
+
+
+def moe_ffn(params, x, cfg: ArchConfig, mesh: Optional[jax.sharding.Mesh] = None,
+            **kw) -> jax.Array:
+    if mesh is None or mesh.shape.get("data", 1) == 1 or cfg.moe.n_experts % mesh.shape["data"] != 0:
+        return moe_ffn_ref(params, x, cfg)
+    kw.setdefault(
+        "capacity_factor", float(os.environ.get("REPRO_MOE_CF", "1.25"))
+    )
+    return moe_ffn_ep(params, x, cfg, mesh, **kw)

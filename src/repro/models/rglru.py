@@ -1,0 +1,128 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+a_t = exp(-c * softplus(Lambda) * r_t),  c = 8.
+
+Training/prefill uses an associative scan (log-depth); decode is the
+single-step update. The block wraps the LRU with the Griffin recurrent
+block structure: two input branches (gelu gate / conv -> LRU), merged and
+projected out.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.modules import dense_init
+
+_C = 8.0
+
+
+def _lru_width(cfg: ArchConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    w = _lru_width(cfg)
+    cw = cfg.hybrid.conv_width
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": dense_init(ks[0], d, w, dtype),  # conv->LRU branch
+        "w_y": dense_init(ks[1], d, w, dtype),  # gelu gate branch
+        "conv_w": (jax.random.normal(ks[2], (cw, w)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_input_gate": dense_init(ks[3], w, w, dtype, scale=0.01),
+        "w_rec_gate": dense_init(ks[4], w, w, dtype, scale=0.01),
+        # Lambda init so that a in (0.9, 0.999) at r=1 (Griffin appendix)
+        "lam": jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)).astype(
+            jnp.float32
+        ),
+        "w_out": dense_init(ks[5], w, d, dtype),
+    }
+
+
+def _gates(params, u):
+    i_t = jax.nn.sigmoid(u @ params["w_input_gate"].astype(u.dtype))
+    r_t = jax.nn.sigmoid(u @ params["w_rec_gate"].astype(u.dtype))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r_t.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return i_t.astype(jnp.float32), a, beta
+
+
+def _causal_conv(x, w, b):
+    cw = w.shape[0]
+    xpad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    return sum(xpad[:, i : i + x.shape[1]] * w[i][None, None] for i in range(cw)) + b
+
+
+def rglru_forward(params: Dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D); full-sequence associative scan."""
+    y_branch = jax.nn.gelu(x @ params["w_y"].astype(x.dtype))
+    u = _causal_conv(x @ params["w_x"].astype(x.dtype), params["conv_w"], params["conv_b"])
+    i_t, a, beta = _gates(params, u)
+    b_t = beta * (i_t * u.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b_t), axis=1)
+    out = (h.astype(x.dtype) * y_branch) @ params["w_out"].astype(x.dtype)
+    return out
+
+
+def rglru_prefill(
+    params: Dict, x: jax.Array, cfg: ArchConfig, cache: Dict
+) -> Tuple[jax.Array, Dict]:
+    """Full-sequence scan that also returns the final recurrent state
+    (for subsequent decode steps)."""
+    y_branch = jax.nn.gelu(x @ params["w_y"].astype(x.dtype))
+    xin = x @ params["w_x"].astype(x.dtype)
+    u = _causal_conv(xin, params["conv_w"], params["conv_b"])
+    i_t, a, beta = _gates(params, u)
+    b_t = beta * (i_t * u.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b_t), axis=1)
+    out = (h.astype(x.dtype) * y_branch) @ params["w_out"].astype(x.dtype)
+    cw = cfg.hybrid.conv_width
+    new_cache = {
+        "h": h[:, -1],
+        "conv": xin[:, -(cw - 1) :].astype(cache["conv"].dtype),
+        "pos": cache["pos"] + x.shape[1],
+    }
+    return out, new_cache
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict:
+    w = _lru_width(cfg)
+    cw = cfg.hybrid.conv_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cw - 1, w), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def rglru_step(
+    params: Dict, x: jax.Array, cfg: ArchConfig, cache: Dict
+) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, D); single-step recurrence."""
+    y_branch = jax.nn.gelu(x @ params["w_y"].astype(x.dtype))
+    xin = x @ params["w_x"].astype(x.dtype)  # (B,1,W)
+    hist = jnp.concatenate([cache["conv"], xin], axis=1)
+    u = (jnp.einsum("bwc,wc->bc", hist, params["conv_w"]) + params["conv_b"])[:, None]
+    i_t, a, beta = _gates(params, u)
+    h = cache["h"] * a[:, 0] + (beta * (i_t * u.astype(jnp.float32)))[:, 0]
+    out = (h[:, None].astype(x.dtype) * y_branch) @ params["w_out"].astype(x.dtype)
+    return out, {"h": h, "conv": hist[:, 1:], "pos": cache["pos"] + 1}

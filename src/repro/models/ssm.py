@@ -1,0 +1,242 @@
+"""Mamba2 block: SSD (state-space duality) chunked algorithm
+[arXiv:2405.21060], pure JAX.
+
+Training/prefill uses the chunked dual form (intra-chunk "attention-like"
+term + inter-chunk state recurrence via scan) — O(S·Q) not O(S^2).
+Decode is the O(1) recurrent update. Both share parameters; the test
+suite checks chunked == step-by-step recurrence.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.modules import dense_init, rmsnorm
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = cfg.d_model * s.expand
+    n_heads = d_in // s.head_dim
+    return d_in, n_heads, s.d_state, s.head_dim, s.conv_width
+
+
+def init_mamba2(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    d_in, h, n, p, cw = _dims(cfg)
+    d = cfg.d_model
+    conv_ch = d_in + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * d_in + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cw, conv_ch)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": jnp.zeros((d_in,), dtype),
+        "w_out": dense_init(ks[3], d_in, d, dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    d_in, h, n, p, _ = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xc = zxbcdt[..., d_in : 2 * d_in]
+    b = zxbcdt[..., 2 * d_in : 2 * d_in + n]
+    c = zxbcdt[..., 2 * d_in + n : 2 * d_in + 2 * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * n :]
+    return z, xc, b, c, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C), width w.shape[0]."""
+    cw = w.shape[0]
+    xpad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(
+        xpad[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(cw)
+    )
+    return out + b
+
+
+def mamba2_forward(
+    params: Dict, x: jax.Array, cfg: ArchConfig
+) -> jax.Array:
+    """Chunked SSD over full sequences. x: (B, S, D)."""
+    d_in, h, n, p, _ = _dims(cfg)
+    q = cfg.ssm.chunk
+    bsz, s, _ = x.shape
+    assert s % q == 0 or s < q, (s, q)
+    q = min(q, s)
+    nc = s // q
+
+    z, xc, b, c, dt = _split_proj(x @ params["w_in"].astype(x.dtype), cfg)
+    conv = jax.nn.silu(
+        _causal_conv(
+            jnp.concatenate([xc, b, c], -1), params["conv_w"], params["conv_b"]
+        ).astype(jnp.float32)
+    ).astype(x.dtype)
+    xc, b, c = conv[..., :d_in], conv[..., d_in : d_in + n], conv[..., d_in + n :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["a_log"])  # (H,)
+    dlog = dt * a  # (B,S,H), negative log-decay per step
+
+    xh = xc.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    bq = b.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cq = c.reshape(bsz, nc, q, n).astype(jnp.float32)
+    dtq = dt.reshape(bsz, nc, q, h)
+    dl = dlog.reshape(bsz, nc, q, h)
+    cum = jnp.cumsum(dl, axis=2)  # (B,NC,Q,H)
+
+    # ---- intra-chunk (dual quadratic form, masked) -------------------
+    cb = jnp.einsum("bcqn,bckn->bcqk", cq, bq)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    # mask the exponent BEFORE exp: masked (k>q) entries have positive
+    # exponents that overflow, and a post-hoc where() still leaks NaN
+    # into the backward pass (0 * d(inf) = NaN)
+    seg = cum[:, :, :, None] - cum[:, :, None, :]  # (B,NC,Q,K,H)
+    seg = jnp.where(mask[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)
+    m = cb[..., None] * decay * dtq[:, :, None]
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", m, xh)
+
+    # ---- chunk states + inter-chunk recurrence -----------------------
+    last = cum[:, :, -1]  # (B,NC,H)
+    s_decay = jnp.exp(last[:, :, None] - cum) * dtq  # (B,NC,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", bq, s_decay, xh)
+
+    def step(h_prev, inp):
+        st, dec = inp  # (B,H,N,P), (B,H)
+        h_new = h_prev * jnp.exp(dec)[:, :, None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        step,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), last.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)  # (B,NC,H,N,P)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", cq, jnp.exp(cum), h_prevs)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + xh.reshape(bsz, s, h, p) * params["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, d_in)
+    y = rmsnorm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                params["norm"], cfg.norm_eps)
+    return y @ params["w_out"].astype(x.dtype)
+
+
+def mamba2_prefill(
+    params: Dict, x: jax.Array, cfg: ArchConfig, cache: Dict
+) -> Tuple[jax.Array, Dict]:
+    """Chunked forward that also returns the final SSM + conv state.
+
+    Reuses the chunked math but re-derives the final state from the scan
+    carry; conv state is the last (cw-1) pre-activation inputs.
+    """
+    d_in, h, n, p, cw = _dims(cfg)
+    q = min(cfg.ssm.chunk, x.shape[1])
+    bsz, s, _ = x.shape
+    nc = s // q
+
+    z, xc, b, c, dt = _split_proj(x @ params["w_in"].astype(x.dtype), cfg)
+    conv_in = jnp.concatenate([xc, b, c], -1)
+    conv = jax.nn.silu(
+        _causal_conv(conv_in, params["conv_w"], params["conv_b"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    xc2, b2, c2 = conv[..., :d_in], conv[..., d_in : d_in + n], conv[..., d_in + n :]
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    dlog = dtf * a
+
+    xh = xc2.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    bq = b2.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cq = c2.reshape(bsz, nc, q, n).astype(jnp.float32)
+    dtq = dtf.reshape(bsz, nc, q, h)
+    dl = dlog.reshape(bsz, nc, q, h)
+    cum = jnp.cumsum(dl, axis=2)
+
+    cb = jnp.einsum("bcqn,bckn->bcqk", cq, bq)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    # mask the exponent BEFORE exp: masked (k>q) entries have positive
+    # exponents that overflow, and a post-hoc where() still leaks NaN
+    # into the backward pass (0 * d(inf) = NaN)
+    seg = cum[:, :, :, None] - cum[:, :, None, :]  # (B,NC,Q,K,H)
+    seg = jnp.where(mask[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)
+    m = cb[..., None] * decay * dtq[:, :, None]
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", m, xh)
+
+    last = cum[:, :, -1]
+    s_decay = jnp.exp(last[:, :, None] - cum) * dtq
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", bq, s_decay, xh)
+
+    def step(h_prev, inp):
+        st, dec = inp
+        return h_prev * jnp.exp(dec)[:, :, None, None] + st, h_prev
+
+    h0 = cache["h"]
+    h_final, h_prevs = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4), last.transpose(1, 0, 2))
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", cq, jnp.exp(cum), h_prevs)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + xh.reshape(bsz, s, h, p) * params["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, d_in)
+    y = rmsnorm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                params["norm"], cfg.norm_eps)
+    out = y @ params["w_out"].astype(x.dtype)
+    new_cache = {
+        "h": h_final,
+        "conv": conv_in[:, -(cw - 1) :].astype(cache["conv"].dtype),
+        "pos": cache["pos"] + s,
+    }
+    return out, new_cache
+
+
+# ------------------------------------------------------------- decoding
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict:
+    d_in, h, n, p, cw = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, h, n, p), jnp.float32),
+        "conv": jnp.zeros((batch, cw - 1, d_in + 2 * n), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mamba2_step(
+    params: Dict, x: jax.Array, cfg: ArchConfig, cache: Dict
+) -> Tuple[jax.Array, Dict]:
+    """Single-token recurrent update. x: (B, 1, D)."""
+    d_in, h, n, p, cw = _dims(cfg)
+    bsz = x.shape[0]
+    z, xc, b, c, dt = _split_proj(x @ params["w_in"].astype(x.dtype), cfg)
+    conv_in = jnp.concatenate([xc, b, c], -1)  # (B,1,C)
+    hist = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,cw,C)
+    conv = jax.nn.silu(
+        (jnp.einsum("bwc,wc->bc", hist, params["conv_w"]) + params["conv_b"]).astype(jnp.float32)
+    )[:, None].astype(x.dtype)
+    xc, b, c = conv[..., :d_in], conv[..., d_in : d_in + n], conv[..., d_in + n :]
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a)  # (B,H)
+    xh = xc[:, 0].reshape(bsz, h, p).astype(jnp.float32)
+    bv = b[:, 0].astype(jnp.float32)  # (B,N)
+    cv = c[:, 0].astype(jnp.float32)
+    h_new = cache["h"] * decay[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", bv, dt, xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cv, h_new) + xh * params["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, d_in)
+    y = rmsnorm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                params["norm"], cfg.norm_eps)
+    out = y @ params["w_out"].astype(x.dtype)
+    return out, {"h": h_new, "conv": hist[:, 1:], "pos": cache["pos"] + 1}

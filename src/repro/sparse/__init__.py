@@ -1,0 +1,24 @@
+"""Sparse substrate: CSR/block-ELL containers, generators, reference ops."""
+from repro.sparse.csr import CSR, csr_from_coo, csr_from_dense, graph_signature
+from repro.sparse.bsr import BlockELL, csr_to_block_ell
+from repro.sparse.generators import (
+    erdos_renyi,
+    hub_skew,
+    reddit_like,
+    products_like,
+    sliding_window_csr,
+)
+
+__all__ = [
+    "CSR",
+    "csr_from_coo",
+    "csr_from_dense",
+    "graph_signature",
+    "BlockELL",
+    "csr_to_block_ell",
+    "erdos_renyi",
+    "hub_skew",
+    "reddit_like",
+    "products_like",
+    "sliding_window_csr",
+]

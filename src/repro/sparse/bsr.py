@@ -1,0 +1,181 @@
+"""Block-ELL format: the TPU-native re-blocking of CSR (DESIGN.md §2).
+
+TPU kernels cannot gather per-element rows of B from HBM the way CUDA
+warps can. We therefore re-block a CSR matrix into *block-ELL*:
+
+  - rows grouped into blocks of ``rb`` rows,
+  - columns grouped into blocks of ``bc`` columns,
+  - for each row-block, the list of referenced column-block ids is padded
+    to a uniform width ``W`` (the ELL width of that partition),
+  - the values of each (row-block, col-block) pair are stored as a dense
+    ``rb x bc`` micro-tile.
+
+The SpMM kernel then runs a grid over (row_block, f_tile, slot) and uses
+scalar-prefetched ``colblk`` ids to drive the B-operand ``index_map`` —
+every gather is block-granular and MXU-shaped.
+
+Padding waste (``nnz_padded / nnz``) is an input feature the scheduler's
+estimate stage accounts for (the CUDA version does not need this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.sparse.csr import CSR
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockELL:
+    """Padded block-sparse row format.
+
+    colblk: int32[n_row_blocks, width]        column-block id per slot
+                                              (padded slots point at block 0)
+    vals:   float32[n_row_blocks, width, rb, bc]  dense micro-tiles
+                                              (padded slots are all-zero)
+    nslots: int32[n_row_blocks]               live slots per row-block
+    """
+
+    colblk: np.ndarray
+    vals: np.ndarray
+    nslots: np.ndarray
+    rb: int
+    bc: int
+    n_rows: int
+    n_cols: int
+
+    @property
+    def n_row_blocks(self) -> int:
+        return self.colblk.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.colblk.shape[1]
+
+    @property
+    def n_col_blocks(self) -> int:
+        return -(-self.n_cols // self.bc)
+
+    @property
+    def padded_rows(self) -> int:
+        return self.n_row_blocks * self.rb
+
+    @property
+    def nnz_dense_tiles(self) -> int:
+        return int(self.nslots.sum()) * self.rb * self.bc
+
+    def padding_waste(self, nnz: int) -> float:
+        """nnz_padded / nnz — how much dense micro-tile work per real nnz."""
+        if nnz == 0:
+            return 1.0
+        return self.nnz_dense_tiles / nnz
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros((self.padded_rows, self.n_col_blocks * self.bc), np.float32)
+        for i in range(self.n_row_blocks):
+            for s in range(int(self.nslots[i])):
+                c = int(self.colblk[i, s])
+                out[i * self.rb : (i + 1) * self.rb, c * self.bc : (c + 1) * self.bc] += self.vals[i, s]
+        return out[: self.n_rows, : self.n_cols]
+
+
+def csr_to_block_ell(
+    csr: CSR,
+    rb: int = 8,
+    bc: int = 8,
+    rows: Optional[np.ndarray] = None,
+    min_width: int = 1,
+    width_multiple: int = 1,
+) -> BlockELL:
+    """Re-block (a subset of rows of) a CSR matrix into BlockELL.
+
+    ``rows``: optional row-id subset (used by the hub-split: heavy rows go
+    to one partition, light rows to another, each with its own width).
+    """
+    if rows is None:
+        rows = np.arange(csr.n_rows)
+    rows = np.asarray(rows)
+    n = rows.shape[0]
+    n_row_blocks = max(1, -(-n // rb))
+    vals_src = csr.values_or_ones(np.float32)
+
+    # Per (local row, col-block) accumulation.
+    # Vectorized gather of all edges of the selected rows.
+    deg = csr.degrees[rows] if n else np.zeros(0, np.int64)
+    total = int(deg.sum())
+    edge_row = np.repeat(np.arange(n), deg)  # local row index per edge
+    if total:
+        starts = csr.rowptr[rows]
+        # absolute edge positions: starts[r] + offset within row
+        offsets = np.arange(total) - np.repeat(
+            np.concatenate([[0], np.cumsum(deg)[:-1]]), deg
+        )
+        pos = np.repeat(starts, deg) + offsets
+        edge_col = csr.colind[pos]
+        edge_val = vals_src[pos]
+    else:
+        edge_col = np.zeros(0, np.int32)
+        edge_val = np.zeros(0, np.float32)
+
+    blk_row = edge_row // rb
+    sub_row = edge_row % rb
+    blk_col = edge_col // bc
+    sub_col = edge_col % bc
+
+    # unique (blk_row, blk_col) pairs -> slots
+    key = blk_row.astype(np.int64) * (csr.n_cols // bc + 2) + blk_col
+    uniq, inv = np.unique(key, return_inverse=True)
+    u_blk_row = (uniq // (csr.n_cols // bc + 2)).astype(np.int64)
+    u_blk_col = (uniq % (csr.n_cols // bc + 2)).astype(np.int32)
+
+    nslots = np.zeros(n_row_blocks, np.int32)
+    np.add.at(nslots, u_blk_row, 1)
+    width = int(nslots.max()) if nslots.size else 0
+    width = max(width, min_width)
+    width = -(-width // width_multiple) * width_multiple
+
+    # slot index of each unique pair within its row-block
+    order = np.argsort(uniq, kind="stable")  # uniq already sorted; identity
+    slot_of_uniq = np.zeros(uniq.shape[0], np.int64)
+    # running count per row block (uniq sorted by key => grouped by blk_row)
+    if uniq.size:
+        starts_per_block = np.concatenate([[0], np.cumsum(nslots)[:-1]])
+        slot_of_uniq = np.arange(uniq.shape[0]) - starts_per_block[u_blk_row]
+
+    colblk = np.zeros((n_row_blocks, width), np.int32)
+    vals = np.zeros((n_row_blocks, width, rb, bc), np.float32)
+    if uniq.size:
+        colblk[u_blk_row, slot_of_uniq] = u_blk_col
+        np.add.at(
+            vals,
+            (blk_row, slot_of_uniq[inv], sub_row, sub_col),
+            edge_val,
+        )
+
+    del order
+    return BlockELL(
+        colblk=colblk,
+        vals=vals,
+        nslots=nslots,
+        rb=rb,
+        bc=bc,
+        n_rows=n,
+        n_cols=csr.n_cols,
+    )
+
+
+def hub_split(
+    csr: CSR, hub_threshold: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Partition row ids into (hub_rows, light_rows) by degree threshold.
+
+    The TPU analogue of the paper's CTA-per-hub mapping: heavy rows get
+    their own BlockELL partition (large width, no padding pressure on
+    light rows); light rows get a narrow-width partition.
+    """
+    deg = csr.degrees
+    hub = np.nonzero(deg > hub_threshold)[0]
+    light = np.nonzero(deg <= hub_threshold)[0]
+    return hub, light

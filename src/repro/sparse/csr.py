@@ -1,0 +1,143 @@
+"""CSR container and host-side utilities.
+
+The CSR triplet (rowptr, colind, val) follows the paper's notation (§3).
+Index arrays live as numpy on host (they parameterize kernel schedules and
+cache keys); values may be jnp or numpy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed-sparse-row matrix of shape (n_rows, n_cols).
+
+    rowptr: int32[n_rows + 1]
+    colind: int32[nnz]
+    val:    float[nnz] (may be None => implicit ones, e.g. unweighted graph)
+    """
+
+    rowptr: np.ndarray
+    colind: np.ndarray
+    val: Optional[np.ndarray]
+    n_rows: int
+    n_cols: int
+
+    # ---- invariants -------------------------------------------------
+    def validate(self) -> None:
+        assert self.rowptr.ndim == 1 and self.rowptr.shape[0] == self.n_rows + 1
+        assert self.rowptr[0] == 0 and self.rowptr[-1] == self.nnz
+        assert np.all(np.diff(self.rowptr) >= 0), "rowptr must be nondecreasing"
+        if self.nnz:
+            assert self.colind.min() >= 0 and self.colind.max() < self.n_cols
+        if self.val is not None:
+            assert self.val.shape == (self.nnz,)
+
+    # ---- basic properties -------------------------------------------
+    @property
+    def nnz(self) -> int:
+        return int(self.colind.shape[0])
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.rowptr).astype(np.int64)
+
+    def degree_quantiles(self, qs=(0.5, 0.9, 0.99, 1.0)) -> np.ndarray:
+        d = self.degrees
+        if d.size == 0:
+            return np.zeros(len(qs))
+        return np.quantile(d, qs)
+
+    def values_or_ones(self, dtype=np.float32) -> np.ndarray:
+        if self.val is not None:
+            return np.asarray(self.val, dtype=dtype)
+        return np.ones(self.nnz, dtype=dtype)
+
+    # ---- conversions -------------------------------------------------
+    def to_dense(self, dtype=np.float32) -> np.ndarray:
+        out = np.zeros((self.n_rows, self.n_cols), dtype=dtype)
+        v = self.values_or_ones(dtype)
+        for r in range(self.n_rows):
+            lo, hi = self.rowptr[r], self.rowptr[r + 1]
+            # duplicate col indices accumulate, matching SpMM semantics
+            np.add.at(out[r], self.colind[lo:hi], v[lo:hi])
+        return out
+
+    def row_slice(self, rows: np.ndarray) -> "CSR":
+        """Induced subgraph on a row subset (keeps all columns).
+
+        This is the paper's probe subgraph: a fraction of rows with their
+        full adjacency, so per-row work distribution is preserved.
+        """
+        rows = np.asarray(rows)
+        deg = self.degrees[rows]
+        new_rowptr = np.zeros(rows.shape[0] + 1, dtype=np.int32)
+        np.cumsum(deg, out=new_rowptr[1:])
+        nnz = int(new_rowptr[-1])
+        new_colind = np.empty(nnz, dtype=np.int32)
+        new_val = None if self.val is None else np.empty(nnz, dtype=self.val.dtype)
+        for i, r in enumerate(rows):
+            lo, hi = self.rowptr[r], self.rowptr[r + 1]
+            o_lo, o_hi = new_rowptr[i], new_rowptr[i + 1]
+            new_colind[o_lo:o_hi] = self.colind[lo:hi]
+            if new_val is not None:
+                new_val[o_lo:o_hi] = self.val[lo:hi]
+        return CSR(new_rowptr, new_colind, new_val, rows.shape[0], self.n_cols)
+
+
+def csr_from_coo(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    n_rows: int,
+    n_cols: int,
+    val: Optional[np.ndarray] = None,
+) -> CSR:
+    order = np.lexsort((cols, rows))
+    rows, cols = rows[order], cols[order]
+    if val is not None:
+        val = val[order]
+    rowptr = np.zeros(n_rows + 1, dtype=np.int32)
+    np.add.at(rowptr[1:], rows, 1)
+    np.cumsum(rowptr, out=rowptr)
+    return CSR(
+        rowptr.astype(np.int32),
+        cols.astype(np.int32),
+        None if val is None else np.asarray(val),
+        n_rows,
+        n_cols,
+    )
+
+
+def csr_from_dense(a: np.ndarray) -> CSR:
+    rows, cols = np.nonzero(a)
+    return csr_from_coo(
+        rows.astype(np.int32),
+        cols.astype(np.int32),
+        a.shape[0],
+        a.shape[1],
+        a[rows, cols].astype(a.dtype),
+    )
+
+
+def graph_signature(csr: CSR) -> str:
+    """Stable content hash used in the persistent schedule-cache key.
+
+    Hashes the structure (rowptr/colind) but not values: the paper keys
+    on graph structure + (F, op, device); values change per step.
+    """
+    h = hashlib.sha256()
+    h.update(np.int64([csr.n_rows, csr.n_cols, csr.nnz]).tobytes())
+    h.update(np.ascontiguousarray(csr.rowptr, dtype=np.int64).tobytes())
+    # colind can be huge; hash a deterministic stride sample + exact edges
+    ci = np.ascontiguousarray(csr.colind, dtype=np.int64)
+    if ci.size > 1_000_000:
+        h.update(ci[:: max(1, ci.size // 1_000_000)].tobytes())
+        h.update(ci[-1024:].tobytes())
+    else:
+        h.update(ci.tobytes())
+    return h.hexdigest()[:16]

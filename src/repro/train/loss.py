@@ -1,0 +1,25 @@
+"""Losses: masked causal cross-entropy + z-loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(
+    logits: jax.Array,  # (B, S, V) f32
+    labels: jax.Array,  # (B, S) i32; -1 = masked
+    z_loss: float = 1e-4,
+):
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    zl = z_loss * jnp.square(lse) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll + zl).sum() / denom
+    return loss, {
+        "nll": nll.sum() / denom,
+        "z_loss": zl.sum() / denom,
+        "tokens": mask.sum(),
+    }

@@ -1,0 +1,69 @@
+"""Train / serve step factories — the functions the launcher jits with
+explicit in/out shardings and the dry-run lowers at scale."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+from repro.optim.adamw import AdamWConfig, OptState, adamw_update, init_opt_state
+from repro.train.loss import cross_entropy
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt: OptState
+
+
+def init_train_state(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> TrainState:
+    params = api.init_model(cfg, key, dtype)
+    return TrainState(
+        step=jnp.zeros((), jnp.int32), params=params, opt=init_opt_state(params)
+    )
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, mesh=None):
+    def loss_fn(params, batch):
+        logits = api.forward(params, batch, cfg, mesh)
+        loss, aux = cross_entropy(logits, batch["labels"])
+        return loss, aux
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch
+        )
+        new_params, new_opt, opt_aux = adamw_update(
+            opt_cfg, grads, state.params, state.opt
+        )
+        metrics = {"loss": loss, **aux, **opt_aux}
+        return TrainState(state.step + 1, new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, mesh=None):
+    def eval_step(params, batch):
+        logits = api.forward(params, batch, cfg, mesh)
+        loss, aux = cross_entropy(logits, batch["labels"], z_loss=0.0)
+        return {"loss": loss, **aux}
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ArchConfig, mesh=None):
+    def prefill_step(params, batch, cache):
+        return api.prefill(params, batch, cfg, cache, mesh)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, mesh=None, long_ctx: bool = False):
+    def decode_step(params, tokens, cache):
+        return api.decode_step(params, tokens, cfg, cache, mesh, long_ctx)
+
+    return decode_step

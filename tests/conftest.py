@@ -1,0 +1,14 @@
+import os
+import sys
+from pathlib import Path
+
+# tests see 1 device (the dry-run forces 512 in its own process only)
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,90 @@
+"""Beyond-paper performance variants must be numerically equivalent to
+their baselines (they are flipped on in §Perf)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.models import api
+from repro.models.moe import dispatch_variant, init_moe, moe_ffn_ref
+
+
+@pytest.mark.parametrize("arch", ["qwen3_14b", "recurrentgemma_2b"])
+def test_chunked_attention_matches_naive(arch):
+    cfg = reduced(get_config(arch))
+    params = api.init_model(cfg, jax.random.PRNGKey(0), jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, cfg.vocab)
+    os.environ["REPRO_ATTN"] = "naive"
+    try:
+        base = api.forward(params, {"tokens": toks}, cfg)
+        os.environ["REPRO_ATTN"] = "chunked"
+        chunk = api.forward(params, {"tokens": toks}, cfg)
+    finally:
+        os.environ["REPRO_ATTN"] = "naive"
+    # bf16 probs => looser tolerance
+    np.testing.assert_allclose(np.asarray(chunk), np.asarray(base), rtol=4e-2, atol=4e-2)
+
+
+def test_chunked_prefill_matches_naive():
+    cfg = reduced(get_config("qwen3_14b"))
+    params = api.init_model(cfg, jax.random.PRNGKey(0), jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0, cfg.vocab)
+    os.environ["REPRO_ATTN"] = "naive"
+    try:
+        c1 = api.init_cache(cfg, 2, 32, jnp.float32)
+        l1, _ = api.prefill(params, {"tokens": toks}, cfg, c1)
+        os.environ["REPRO_ATTN"] = "chunked"
+        c2 = api.init_cache(cfg, 2, 32, jnp.float32)
+        l2, _ = api.prefill(params, {"tokens": toks}, cfg, c2)
+    finally:
+        os.environ["REPRO_ATTN"] = "naive"
+    np.testing.assert_allclose(np.asarray(l2), np.asarray(l1), rtol=4e-2, atol=4e-2)
+
+
+def test_mla_absorbed_matches_naive():
+    """Absorbed-weight MLA decode (latent-space attention) must equal the
+    naive decompress-K/V path."""
+    cfg = reduced(get_config("deepseek_v2_lite_16b"))
+    params = api.init_model(cfg, jax.random.PRNGKey(0), jnp.float32)
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    cache = api.init_cache(cfg, B, S, jnp.float32)
+    _, cache = api.prefill(params, {"tokens": toks[:, : S - 1]}, cfg, cache)
+    naive, _ = api.decode_step(params, toks[:, S - 1 :], cfg, cache)
+    os.environ["REPRO_MLA_ABSORB"] = "1"
+    try:
+        absorbed, _ = api.decode_step(params, toks[:, S - 1 :], cfg, cache)
+    finally:
+        del os.environ["REPRO_MLA_ABSORB"]
+    np.testing.assert_allclose(
+        np.asarray(absorbed), np.asarray(naive), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_moe_dispatch_variants_agree():
+    cfg = reduced(get_config("deepseek_v2_lite_16b"))
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    a = moe_ffn_ref(params, x, cfg, variant="sorted_ragged")
+    b = moe_ffn_ref(params, x, cfg, variant="dense_onehot")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-3)
+    assert dispatch_variant(cfg, 100_000) == "sorted_ragged"
+
+
+def test_hybrid_period_scan_structure():
+    """26-layer pattern (rglru,rglru,attn): head keeps the remainder, the
+    scan unit is one whole period."""
+    from repro.models.transformer import _stack_plan
+
+    cfg = get_config("recurrentgemma_2b")
+    head, unit, reps = _stack_plan(cfg)
+    assert len(head) == 26 % 3 == 2
+    assert head == ["rglru", "rglru"]
+    assert unit == ("attn", "rglru", "rglru")
+    assert reps == 8
+    dense = get_config("qwen3_14b")
+    head_d, unit_d, reps_d = _stack_plan(dense)
+    assert head_d == [] and unit_d == ("attn_mlp",) and reps_d == 40

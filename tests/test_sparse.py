@@ -1,0 +1,96 @@
+"""CSR / BlockELL container invariants + generators (property-based)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import (
+    CSR,
+    csr_from_dense,
+    csr_to_block_ell,
+    erdos_renyi,
+    hub_skew,
+    products_like,
+    reddit_like,
+    sliding_window_csr,
+)
+from repro.sparse.bsr import hub_split
+from repro.sparse.generators import table10_graph
+
+
+@given(
+    n=st.integers(2, 64),
+    m=st.integers(2, 64),
+    density=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_csr_dense_roundtrip(n, m, density, seed):
+    rng = np.random.default_rng(seed)
+    a = (rng.random((n, m)) < density) * rng.standard_normal((n, m)).astype(np.float32)
+    csr = csr_from_dense(a.astype(np.float32))
+    csr.validate()
+    np.testing.assert_allclose(csr.to_dense(), a, rtol=1e-6, atol=1e-6)
+
+
+@given(
+    n=st.integers(1, 50),
+    m=st.integers(1, 50),
+    density=st.floats(0.0, 0.6),
+    rb=st.sampled_from([4, 8, 16]),
+    bc=st.sampled_from([4, 8]),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=25, deadline=None)
+def test_block_ell_roundtrip(n, m, density, rb, bc, seed):
+    rng = np.random.default_rng(seed)
+    a = ((rng.random((n, m)) < density) * rng.standard_normal((n, m))).astype(np.float32)
+    csr = csr_from_dense(a)
+    bell = csr_to_block_ell(csr, rb=rb, bc=bc)
+    np.testing.assert_allclose(bell.to_dense(), a, rtol=1e-6, atol=1e-6)
+    assert bell.padding_waste(max(csr.nnz, 1)) >= 1.0 or csr.nnz == 0
+
+
+def test_generators_stats():
+    g = erdos_renyi(5000, 1e-3, seed=0)
+    g.validate()
+    assert abs(g.nnz - 5000 * 5000 * 1e-3) < 5000  # ~25k edges
+    h = hub_skew(5000, 4, 0.1, 100, seed=0)
+    h.validate()
+    deg = h.degrees
+    assert (deg == 100).sum() == 500 and (deg == 4).sum() == 4500
+    t = table10_graph(2000, 500, 64, seed=0)
+    assert (t.degrees == 500).sum() == 20
+    r = reddit_like(scale=0.01, seed=0)
+    r.validate()
+    assert r.degrees.max() > 4 * r.degrees.mean()  # heavy tail
+    p = products_like(scale=0.002, seed=0)
+    p.validate()
+
+
+def test_hub_split_partition():
+    h = hub_skew(2000, 4, 0.05, 200, seed=1)
+    hubs, light = hub_split(h, hub_threshold=50)
+    assert len(hubs) + len(light) == 2000
+    assert np.all(h.degrees[hubs] > 50)
+    assert np.all(h.degrees[light] <= 50)
+
+
+def test_sliding_window_pattern():
+    w = sliding_window_csr(n_q=16, n_k=64, window=8, n_global=2)
+    w.validate()
+    dense = w.to_dense()
+    # row i attends to sinks [0,2) and window ending at i+48
+    for i in range(16):
+        cols = np.nonzero(dense[i])[0]
+        assert cols.max() == i + 48
+        assert cols.min() == 0 and 1 in cols
+        assert len(cols) <= 8 + 2
+
+
+def test_row_slice_preserves_rows():
+    g = hub_skew(500, 3, 0.1, 50, seed=2)
+    rows = np.array([0, 5, 100, 499])
+    sub = g.row_slice(rows)
+    sub.validate()
+    assert sub.n_rows == 4
+    np.testing.assert_array_equal(sub.degrees, g.degrees[rows])
