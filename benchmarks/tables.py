@@ -220,47 +220,89 @@ def probe_overhead(full: bool = False) -> List[Tuple]:
 
 
 def csr_attention_pipeline(full: bool = False) -> List[Tuple]:
-    """§8.7: sddmm_auto -> row-softmax -> spmm_auto vs staged baseline."""
-    csr = products_like(scale=0.01)
+    """§8.7 at pipeline granularity: composed {sddmm x softmax x spmm}
+    candidates and the fused Pallas kernel, decided jointly by
+    AutoSage.attention; reports end-to-end candidate timings, the chosen
+    pipeline's full-graph runtime vs the 3-kernel baseline, and the
+    per-stage breakdown of the winner."""
+    csr = products_like(scale=0.05 if full else 0.01).dedup_edges()
     rng = np.random.default_rng(0)
     f = 64
     q = jnp.asarray(rng.standard_normal((csr.n_rows, f)).astype(np.float32))
     k = jnp.asarray(rng.standard_normal((csr.n_cols, f)).astype(np.float32))
     v = jnp.asarray(rng.standard_normal((csr.n_cols, f)).astype(np.float32))
-    rowptr, colind = jnp.asarray(csr.rowptr), jnp.asarray(csr.colind)
-
-    pipeline = jax.jit(
-        lambda q, k, v: ref.csr_attention_ref(rowptr, colind, q, k, v)
-    )
-    t_base = _measure_full(lambda: pipeline(q, k, v), iters=3)
 
     sage = _fresh_sage()
+    # time the decision as a user pays it (no diagnostic breakdown), then
+    # fetch the per-stage breakdown of the cached choice separately
     t0 = time.perf_counter()
-    d_sddmm = sage.decide(csr, f, "sddmm")
-    d_spmm = sage.decide(csr, f, "spmm")
-    t_probe = (time.perf_counter() - t0) * 1e3
-    sddmm_run = sage.build_runner(csr, d_sddmm)
+    decision = sage.decide_attention(csr, f)
+    t_decide = (time.perf_counter() - t0) * 1e3
+    from repro.core.pipeline import probe_stage_breakdown
+    decision.stage_ms.update(
+        probe_stage_breakdown(sage, csr, f, decision.variant)
+    )
 
-    # one jitted pipeline (the chosen sddmm variant composes with the
-    # softmax + value-SpMM under a single XLA program, as §8.7 caches do)
-    @jax.jit
-    def auto_pipeline(q, k, v):
-        logits = sddmm_run(q, k) / (f ** 0.5)
-        probs = ref.row_softmax_ref(rowptr, colind, logits)
-        # attention probs are per-edge values; the value SpMM runs the
-        # gather/segsum form over them
-        return ref.spmm_ref(rowptr, colind, probs, v)
+    feat = InputFeatures.from_csr(csr, f, "attention")
+    base_v = registry.baseline(feat, sage.hw)
+    base_run = base_v.build(base_v.prepare(csr))
+    t_base = _measure_full(lambda: base_run(q, k, v), iters=3)
+    if decision.choice == "baseline":
+        t_chosen = t_base
+    else:
+        chosen_run = sage.build_runner(csr, decision)
+        t_chosen = _measure_full(lambda: chosen_run(q, k, v), iters=3)
 
-    t_auto = _measure_full(lambda: auto_pipeline(q, k, v), iters=3)
-    rows = [
-        ("staged_baseline", round(t_base, 3), "-", "-"),
-        ("autosage_uncached", round(t_auto + t_probe, 3), d_sddmm.choice, d_spmm.choice),
-        ("autosage_cached", round(t_auto, 3), d_sddmm.choice, d_spmm.choice),
+    rows: List[Tuple] = [
+        ("full", "baseline_3kernel", round(t_base, 3), 1.0),
+        ("full", decision.choice, round(t_chosen, 3),
+         round(t_base / max(t_chosen, 1e-9), 3)),
+        ("decide", "probe+estimate overhead", round(t_decide, 3), "-"),
     ]
-    for r in rows:
-        print(f"  [csr-attn] {r[0]:20s} {r[1]:8.3f}ms sddmm={r[2]} spmm={r[3]}")
+    for name, ms in sorted(decision.probe_ms.items(), key=lambda kv: kv[1]):
+        rows.append(("probe", name, round(ms, 3), "-"))
+    for stage, ms in decision.stage_ms.items():
+        rows.append(("stage", stage, round(ms, 3), "-"))
+    for kind, name, ms, sp in rows:
+        print(f"  [csr-attn] {kind:7s} {name:42s} {ms:10.3f}ms speedup={sp}")
     write_csv(f"{OUT}/csr_attention.csv",
-              ["mode", "ms", "sddmm_choice", "spmm_choice"], rows)
+              ["kind", "name", "ms", "speedup"], rows)
+    return rows
+
+
+def smoke(full: bool = False) -> List[Tuple]:
+    """Seconds-fast bit-rot check for CI (--smoke): one scheduled SpMM and
+    one pipeline-level attention decision on tiny graphs, results checked
+    finite and (for attention) against the reference oracle."""
+    del full
+    csr = hub_skew(2000, 4, 0.05, 24, seed=0).dedup_edges()
+    rng = np.random.default_rng(0)
+    sage = AutoSage(
+        cache=ScheduleCache(path=None), probe_iters=1, probe_cap_ms=50,
+        probe_frac=0.25,
+    )
+    b = rng.standard_normal((csr.n_cols, 32)).astype(np.float32)
+    out, d_spmm = sage.spmm(csr, jnp.asarray(b))
+    assert np.isfinite(np.asarray(out)).all()
+
+    f = 16
+    q = jnp.asarray(rng.standard_normal((csr.n_rows, f)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((csr.n_cols, f)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((csr.n_cols, f)).astype(np.float32))
+    out_a, d_attn = sage.attention(csr, q, k, v)
+    exp = ref.csr_attention_ref(
+        jnp.asarray(csr.rowptr), jnp.asarray(csr.colind), q, k, v
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_a), np.asarray(exp), rtol=5e-3, atol=5e-3
+    )
+    rows = [
+        ("spmm", len(d_spmm.probe_ms), d_spmm.choice),
+        ("attention", len(d_attn.probe_ms), d_attn.choice),
+    ]
+    for op, n_probed, choice in rows:
+        print(f"  [smoke] {op:10s} choice={choice} candidates_probed={n_probed}")
+    write_csv(f"{OUT}/smoke.csv", ["op", "candidates_probed", "choice"], rows)
     return rows
 
 
@@ -274,4 +316,9 @@ ALL_TABLES = {
     "table10_split": table_split,
     "probe_overhead": probe_overhead,
     "csr_attention": csr_attention_pipeline,
+}
+
+# run only via --smoke (CI) or --only smoke; not part of the default sweep
+SMOKE_TABLES = {
+    "smoke": smoke,
 }

@@ -5,15 +5,18 @@ on an induced subgraph -> guardrail (never regress, Prop. 1) -> persistent
 cache with deterministic replay.
 """
 from repro.core.features import HardwareSpec, InputFeatures, device_sig
-from repro.core.scheduler import AutoSage, Decision
+from repro.core.scheduler import AutoSage, Decision, ProbeOutcome
 from repro.core.cache import ScheduleCache, ReplayMiss
 from repro.core.guardrail import apply_guardrail, GuardrailDecision
+from repro.core.pipeline import AttentionDecision
 
 __all__ = [
     "AutoSage",
+    "AttentionDecision",
     "Decision",
     "HardwareSpec",
     "InputFeatures",
+    "ProbeOutcome",
     "ScheduleCache",
     "ReplayMiss",
     "apply_guardrail",

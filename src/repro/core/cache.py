@@ -17,6 +17,11 @@ from typing import Any, Dict, Optional
 
 DEFAULT_PATH = os.environ.get("AUTOSAGE_CACHE", "autosage_cache.json")
 
+# entry schema: 1 = per-op decisions (choice/probe_ms/estimates_ms);
+# 2 adds joint pipeline decisions ("op": "attention", "stage_ms").
+# Reads stay tolerant of either shape, so old caches replay unchanged.
+SCHEMA_VERSION = 2
+
 
 class ReplayMiss(RuntimeError):
     pass
@@ -57,8 +62,12 @@ class ScheduleCache:
         if self.replay_only:
             raise ReplayMiss("cannot write cache in replay-only mode")
         with self._lock:
-            self._data[key] = entry
+            self._data[key] = {"schema": SCHEMA_VERSION, **entry}
             self._flush()
+
+    def keys_for_op(self, op: str):
+        """All cached keys for one op (keys embed ``|<op>|``)."""
+        return [k for k in self._data if f"|{op}|" in k]
 
     def _flush(self) -> None:
         if not self.path:

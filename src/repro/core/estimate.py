@@ -83,14 +83,66 @@ def estimate_sddmm(feat: InputFeatures, hw: HardwareSpec, variant: str,
     return _roofline(bytes_moved, flops, hw)
 
 
+# layout each attention stage works in; a mismatch inside a composed
+# pipeline costs an extra nnz-sized scatter/gather between stages
+_ATTN_STAGE_LAYOUT = {
+    "gather_dot": "csr",
+    "gather_segsum": "csr",
+    "row_ell": "ell",
+}
+
+
+def estimate_attention(feat: InputFeatures, hw: HardwareSpec, variant: str,
+                       knobs: Dict) -> float:
+    """Pipeline-granularity roofline for CSR attention (core/pipeline.py).
+
+    Composed "pipe" candidates pay two inter-stage HBM round-trips that a
+    per-op estimate never sees: SDDMM writes logits which softmax reads
+    back, and softmax writes probs which the value-SpMM reads back
+    (4 * nnz * 4B of traffic). The fused flash-style kernel keeps
+    logits/probs in VMEM, so its estimate has no inter-stage term — this
+    asymmetry is exactly what makes the decision input-dependent (the
+    round-trips dominate at small F, tile padding waste at large skew).
+    """
+    nnz, f = feat.nnz, feat.f
+    if variant == "pipe":
+        s, m = knobs["sddmm"], knobs["spmm"]
+        t = estimate_sddmm(feat, hw, s, {})
+        # softmax: read logits + mask bookkeeping, write probs; few flops
+        t += 2.0 * nnz * BYTES_F32 / hw.hbm_bw + 6.0 * nnz / hw.peak_flops
+        t += estimate_spmm(feat, hw, m, {})
+        # the two inter-stage round-trips (logits w+r, probs w+r)
+        t += 4.0 * nnz * BYTES_F32 / hw.hbm_bw
+        if _ATTN_STAGE_LAYOUT[s] != _ATTN_STAGE_LAYOUT[m]:
+            # CSR<->ELL conversion: one nnz-sized gather/scatter + indices
+            t += nnz * (BYTES_F32 + 8) / hw.hbm_bw
+        return t
+    if variant == "fused_attention_pallas":
+        waste = knobs.get("padding_waste", 8.0)
+        eff = nnz * waste  # padded micro-tile work
+        bc = knobs.get("bc", 8)
+        rb = knobs.get("rb", 8)
+        # q/k/v/out streamed once; k,v tiles re-fetched per stored block;
+        # structural mask read once; NO logits/probs HBM round-trips
+        bytes_moved = (feat.n_rows * 2 + feat.n_cols * 2) * f * BYTES_F32
+        bytes_moved += eff * BYTES_F32  # mask tiles
+        bytes_moved += eff * (2.0 * f * BYTES_F32 / bc)  # k/v block gathers
+        flops = 4.0 * eff * f + 8.0 * eff  # sddmm + spmm + online softmax
+        n_steps = (feat.n_rows / rb) * max(eff / max(feat.n_rows, 1) / bc, 1.0)
+        return _roofline(bytes_moved, flops, hw) + n_steps * 2e-7
+    raise KeyError(variant)
+
+
 def estimate(feat: InputFeatures, hw: HardwareSpec, variant: str,
              knobs: Dict) -> float:
     if feat.op == "spmm":
         return estimate_spmm(feat, hw, variant, knobs)
     if feat.op in ("sddmm",):
         return estimate_sddmm(feat, hw, variant, knobs)
+    if feat.op == "attention":
+        return estimate_attention(feat, hw, variant, knobs)
     if feat.op == "csr_attention":
-        # pipeline = sddmm + softmax + spmm; softmax ~ bandwidth over nnz
+        # legacy per-op path (pre-pipeline-scheduler); kept for old keys
         t = estimate_sddmm(feat, hw, variant, knobs)
         t += feat.nnz * 3 * BYTES_F32 / hw.hbm_bw
         t += estimate_spmm(feat, hw, variant if variant != "gather_dot" else "gather_segsum", knobs)

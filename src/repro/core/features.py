@@ -58,9 +58,13 @@ class InputFeatures:
     skew: float  # p99 / max(p50, 1) — heavy-tail indicator
     density: float
     f: int  # feature width F
-    op: str  # "spmm" | "sddmm" | "csr_attention"
+    op: str  # "spmm" | "sddmm" | "attention"
     graph_sig: str
     f_mod_4: bool  # paper's vec4 applicability bit (lane-align analogue)
+    # duplicate (row, col) entries change attention-mask semantics (the
+    # fused kernel merges them, the 3-kernel pipeline does not), so the
+    # registry gates fused attention on this bit
+    dup_edges: bool = False
 
     @staticmethod
     def from_csr(csr: CSR, f: int, op: str) -> "InputFeatures":
@@ -81,6 +85,7 @@ class InputFeatures:
             op=op,
             graph_sig=graph_signature(csr),
             f_mod_4=(f % 4 == 0),
+            dup_edges=(csr.has_duplicate_edges() if op == "attention" else False),
         )
 
     def hub_threshold(self) -> int:

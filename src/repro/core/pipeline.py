@@ -1,0 +1,197 @@
+"""Pipeline-level scheduling for CSR attention (SDDMM -> softmax -> SpMM).
+
+`AutoSage.decide` picks a variant per op, so a per-op view can never
+justify the fused flash-style kernel in kernels/attention_pallas.py: its
+benefit — logits/probs never round-trip HBM — lies *between* the ops.
+This module decides at pipeline granularity instead (the direction
+ParamSpMM and "Heuristic Adaptability to Input Dynamics" argue for: the
+best mapping flips with degree skew and feature width, so the decision
+procedure must see the whole composed workload):
+
+  1. enumerate composed candidates {sddmm variant x softmax x spmm
+     variant} plus the fused Pallas kernel, registered as first-class
+     op="attention" Variants in core/registry.py;
+  2. shortlist by the pipeline roofline in core/estimate.py, which
+     charges composed candidates the two inter-stage HBM round-trips the
+     fused kernel avoids;
+  3. micro-probe the shortlist end-to-end on the same induced subgraphs
+     via the slope-mode machinery in core/scheduler.py;
+  4. guardrail (Prop. 1) against the 3-kernel gather/segsum baseline and
+     cache the joint decision under an op="attention" key with
+     deterministic replay (core/cache.py).
+
+Entry points are `AutoSage.attention(csr, q, k, v)` and
+`AutoSage.decide_attention(csr, d)`; models/gnn.py's attention path and
+benchmarks/tables.py run through them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import probe as probe_mod
+from repro.core import registry, telemetry
+from repro.core.cache import ScheduleCache
+from repro.core.features import InputFeatures, device_sig
+from repro.core.guardrail import apply_guardrail
+from repro.core.scheduler import (
+    AutoSage,
+    Decision,
+    ProbeOutcome,
+    default_probe_args,
+)
+from repro.kernels import ref
+from repro.kernels import xla as kx
+from repro.sparse.csr import CSR
+
+
+@dataclasses.dataclass
+class AttentionDecision(Decision):
+    """A joint pipeline decision, plus a per-stage timing breakdown of the
+    chosen candidate (probe-subgraph medians; empty unless requested)."""
+
+    stage_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def to_cache_entry(self) -> Dict:
+        entry = super().to_cache_entry()
+        entry["op"] = "attention"
+        if self.stage_ms:
+            entry["stage_ms"] = dict(self.stage_ms)
+        return entry
+
+
+def decide_attention(
+    sage: AutoSage,
+    csr: CSR,
+    d: int,
+    seed: int = 0,
+    stage_breakdown: bool = False,
+) -> AttentionDecision:
+    """estimate -> end-to-end probe -> guardrail -> cache, at pipeline
+    granularity. ``d`` is the head dimension (the F of the cache key)."""
+    feat = InputFeatures.from_csr(csr, d, "attention")
+    key = ScheduleCache.key(device_sig(), feat.graph_sig, d, "attention", sage.alpha)
+
+    cands = registry.candidates(feat, sage.hw)
+    base = registry.baseline(feat, sage.hw)
+    by_name = {v.full_name(): v for v in cands}
+    by_name["baseline"] = base
+
+    cached = sage.cache.get(key) if sage.cache is not None else None
+    if cached is not None:
+        choice = cached["choice"]
+        decision = AttentionDecision(
+            op="attention", choice=choice, variant=by_name.get(choice, base),
+            guardrail=None, from_cache=True, probe_ms={},
+            probe_overhead_ms=0.0, probe_iter_ms=0.0, estimates_ms={},
+            stage_ms=dict(cached.get("stage_ms", {})),
+        )
+        telemetry.emit_attention_decision(decision)
+        return decision
+
+    estimates, short = sage.shortlist(feat, cands)
+    if short:
+        outcome = sage.probe_candidates(
+            csr, base, short, default_probe_args("attention", d, seed), seed=seed
+        )
+    else:
+        # no challengers: only the 3-kernel baseline applies, skip probing
+        outcome = ProbeOutcome({}, None, float("inf"), 0.0, 0.0, 0.0)
+    gr = apply_guardrail(
+        outcome.best_name, outcome.t_best_ms, outcome.t_baseline_ms, sage.alpha
+    )
+    variant = by_name[gr.choice] if gr.accepted else base
+
+    stage_ms: Dict[str, float] = {}
+    if stage_breakdown:
+        stage_ms = probe_stage_breakdown(sage, csr, d, variant, seed=seed)
+
+    decision = AttentionDecision(
+        op="attention", choice=gr.choice, variant=variant, guardrail=gr,
+        from_cache=False, probe_ms=outcome.probe_ms,
+        probe_overhead_ms=outcome.overhead_ms, probe_iter_ms=outcome.iter_ms,
+        estimates_ms=estimates, stage_ms=stage_ms,
+    )
+    if sage.cache is not None:
+        sage.cache.put(key, decision.to_cache_entry())
+    telemetry.emit_attention_decision(decision)
+    return decision
+
+
+def attention_forward(sage: AutoSage, csr: CSR, q, k, v, seed: int = 0):
+    """decide + prepare + run on the full graph; returns (out, decision)."""
+    d = decide_attention(sage, csr, int(q.shape[1]), seed=seed)
+    return sage.build_runner(csr, d)(q, k, v), d
+
+
+# ---------------------------------------------------------------------
+def probe_stage_breakdown(
+    sage: AutoSage, csr: CSR, d: int, variant: registry.Variant, seed: int = 0
+) -> Dict[str, float]:
+    """Median per-stage ms of ``variant`` on the probe subgraph.
+
+    For composed pipelines the three stages run in each stage's own
+    layout with its inputs pre-materialized, so the numbers isolate
+    stage cost (mixed-layout conversion overhead is visible only in the
+    end-to-end probe_ms, not here). The fused kernel is one stage.
+    """
+    sub = probe_mod.induced_subgraph(csr, frac=sage.probe_frac, seed=seed)
+    q, k, v = default_probe_args("attention", d, seed)(sub)
+    q, k, v = jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+
+    def _med(fn, name):
+        return probe_mod.time_callable(
+            fn, iters=sage.probe_iters, cap_ms=sage.probe_cap_ms, name=name
+        ).median_ms
+
+    if variant.name == "fused_attention_pallas":
+        run = variant.build(variant.prepare(sub))
+        return {"fused": _med(lambda: run(q, k, v), "fused")}
+
+    scale = 1.0 / (d ** 0.5)
+    s_impl = variant.knobs.get("sddmm", "gather_dot")
+    m_impl = variant.knobs.get("spmm", "gather_segsum")
+    out: Dict[str, float] = {}
+
+    rowptr, colind = jnp.asarray(sub.rowptr), jnp.asarray(sub.colind)
+    ell = (registry._prepare_attn_ell(sub)
+           if "row_ell" in (s_impl, m_impl) else None)
+    ell_colind = None if ell is None else jnp.asarray(ell["colind"])
+    ell_mask = None if ell is None else jnp.asarray(ell["val"] != 0)
+
+    # -- SDDMM stage (+ the softmax in the same layout)
+    if s_impl == "row_ell":
+        sddmm_fn = jax.jit(
+            lambda q, k: jnp.einsum("nf,nkf->nk", q, k[ell_colind]) * scale
+        )
+        softmax_fn = jax.jit(lambda lg: kx.ell_masked_softmax(lg, ell_mask))
+    else:
+        sddmm_fn = jax.jit(lambda q, k: ref.sddmm_ref(rowptr, colind, q, k) * scale)
+        softmax_fn = jax.jit(lambda lg: ref.row_softmax_ref(rowptr, colind, lg))
+    out["sddmm"] = _med(lambda: sddmm_fn(q, k), "sddmm")
+    logits = jax.block_until_ready(sddmm_fn(q, k))
+    out["softmax"] = _med(lambda: softmax_fn(logits), "softmax")
+    probs = jax.block_until_ready(softmax_fn(logits))
+
+    # -- value-SpMM stage, consuming probs in its own layout
+    if m_impl == "row_ell":
+        if probs.ndim == 1:  # CSR probs -> ELL table
+            slots = kx.prepare_edge_slots(sub)
+            er, es = jnp.asarray(slots["edge_row"]), jnp.asarray(slots["edge_slot"])
+            probs = jax.block_until_ready(
+                jnp.zeros(ell_colind.shape, probs.dtype).at[er, es].set(probs)
+            )
+        spmm_fn = jax.jit(
+            lambda p, v: jnp.einsum("nk,nkf->nf", p, v[ell_colind].astype(p.dtype))
+        )
+    else:
+        if probs.ndim == 2:  # ELL probs -> CSR values
+            slots = kx.prepare_edge_slots(sub)
+            er, es = jnp.asarray(slots["edge_row"]), jnp.asarray(slots["edge_slot"])
+            probs = jax.block_until_ready(probs[er, es])
+        spmm_fn = jax.jit(lambda p, v: ref.spmm_ref(rowptr, colind, p, v))
+    out["spmm"] = _med(lambda: spmm_fn(probs, v), "spmm")
+    return out

@@ -99,6 +99,14 @@ def kx_ell_to_csr(ell_vals: jax.Array, aux: Dict) -> jax.Array:
     return ell_vals[rows, slot]
 
 
+def _ell_applicable(f: InputFeatures) -> bool:
+    """Uniform-padding gates shared by every row-ELL variant (spmm, sddmm,
+    and the attention pipelines): padding explodes under skew, and the
+    padded table must fit host/device memory."""
+    return (f.deg_max <= max(32.0, 8 * max(f.avg_deg, 1.0))
+            and f.n_rows * f.deg_max <= 512_000_000)
+
+
 # ----------------------------------------------------------------- SpMM
 def _spmm_variants(feat: InputFeatures) -> List[Variant]:
     vs = [
@@ -126,9 +134,7 @@ def _spmm_variants(feat: InputFeatures) -> List[Variant]:
             op="spmm",
             prepare=kx.prepare_row_ell,
             build=lambda aux: (lambda b, a=_dev(aux): _spmm_ell_jit(a, b)),
-            # uniform padding explodes under skew; gate on tail ratio
-            applicable=lambda f, hw: f.deg_max <= max(32.0, 8 * max(f.avg_deg, 1.0))
-            and f.n_rows * f.deg_max <= 512_000_000,
+            applicable=lambda f, hw: _ell_applicable(f),
         ),
     ]
     hub_t = int(os.environ.get("AUTOSAGE_HUB_T", feat.hub_threshold()))
@@ -219,10 +225,114 @@ def _sddmm_variants(feat: InputFeatures) -> List[Variant]:
             build=lambda aux: (
                 lambda x, y, a=_dev(aux): _sddmm_ell_jit(a, x, y)
             ),
-            applicable=lambda f, hw: f.deg_max <= max(32.0, 8 * max(f.avg_deg, 1.0))
-            and f.n_rows * f.deg_max <= 512_000_000,
+            applicable=lambda f, hw: _ell_applicable(f),
         ),
     ]
+
+
+# ------------------------------------------ attention (whole pipelines)
+# Composed SDDMM -> row-softmax -> SpMM candidates, one Variant per
+# {sddmm layout x spmm layout} pair, plus the fused flash-style Pallas
+# kernel. The pipeline scheduler (core/pipeline.py) probes these
+# end-to-end; a per-op decide can never justify the fused kernel because
+# its benefit (no logits/probs HBM round-trip) lies *between* ops.
+
+_attn_csr_jit = jax.jit(kx.attention_csr)
+_attn_ell_jit = jax.jit(kx.attention_ell)
+_attn_ell_csr_jit = jax.jit(kx.attention_ell_to_csr)
+_attn_csr_ell_jit = jax.jit(kx.attention_csr_to_ell)
+
+
+def _structural(csr: CSR) -> CSR:
+    """Attention uses the sparsity pattern only. Drop stored values so the
+    ELL/block-ELL masks (built from val != 0) keep explicitly zero-weighted
+    edges — the CSR baseline ignores values and includes them."""
+    return CSR(csr.rowptr, csr.colind, None, csr.n_rows, csr.n_cols)
+
+
+def _prepare_attn_ell(csr: CSR) -> Dict:
+    return kx.prepare_row_ell(_structural(csr))
+
+
+def _prepare_attn_mixed(csr: CSR) -> Dict:
+    return {
+        **kx.prepare_csr(csr),
+        **{f"ell_{k}": v for k, v in _prepare_attn_ell(csr).items()},
+        **kx.prepare_edge_slots(csr),
+    }
+
+
+def _prepare_attn_fused(csr: CSR, rb: int, bc: int) -> Dict:
+    bell = csr_to_block_ell(_structural(csr), rb=rb, bc=bc)
+    return {
+        "colblk": bell.colblk,
+        "mask": (bell.vals != 0).astype(np.float32),
+        "padded_rows": bell.padded_rows,
+        "n_col_pad": bell.n_col_blocks * bc,
+        "n_rows": bell.n_rows,
+    }
+
+
+def _build_attn_fused(aux: Dict, interpret: bool) -> Callable:
+    from repro.kernels.attention_pallas import fused_csr_attention
+
+    colblk = jnp.asarray(aux["colblk"])
+    mask = jnp.asarray(aux["mask"])
+    pr, ncp, n = int(aux["padded_rows"]), int(aux["n_col_pad"]), int(aux["n_rows"])
+
+    def run(q, k, v):
+        qp = jnp.pad(q, ((0, pr - q.shape[0]), (0, 0)))
+        kp = jnp.pad(k, ((0, ncp - k.shape[0]), (0, 0)))
+        vp = jnp.pad(v, ((0, ncp - v.shape[0]), (0, 0)))
+        return fused_csr_attention(colblk, mask, qp, kp, vp, interpret=interpret)[:n]
+
+    return run
+
+
+def _attention_variants(feat: InputFeatures, include_pallas: bool,
+                        interpret: bool) -> List[Variant]:
+    stage_impls = {
+        ("gather_dot", "gather_segsum"): (kx.prepare_csr, _attn_csr_jit),
+        ("row_ell", "row_ell"): (_prepare_attn_ell, _attn_ell_jit),
+        ("row_ell", "gather_segsum"): (_prepare_attn_mixed, _attn_ell_csr_jit),
+        ("gather_dot", "row_ell"): (_prepare_attn_mixed, _attn_csr_ell_jit),
+    }
+    vs = []
+    for (s, m), (prep, jit_fn) in stage_impls.items():
+        needs_ell = "row_ell" in (s, m)
+        vs.append(
+            Variant(
+                name="pipe",
+                op="attention",
+                prepare=prep,
+                build=lambda aux, j=jit_fn: (
+                    lambda q, k, v, a=_dev(aux): j(a, q, k, v)
+                ),
+                applicable=(
+                    (lambda f, hw: _ell_applicable(f)) if needs_ell
+                    else (lambda f, hw: True)
+                ),
+                knobs={"sddmm": s, "spmm": m},
+                is_baseline=(s == "gather_dot" and m == "gather_segsum"),
+            )
+        )
+    if include_pallas:
+        rb, bc = 8, 8
+        vs.append(
+            Variant(
+                name="fused_attention_pallas",
+                op="attention",
+                prepare=lambda csr, rb=rb, bc=bc: _prepare_attn_fused(csr, rb, bc),
+                build=lambda aux, interpret=interpret: _build_attn_fused(aux, interpret),
+                # duplicate edges merge in block-ELL masking (different
+                # function than the pipeline computes); mask tile memory
+                # grows with n * deg_max under skew
+                applicable=lambda f, hw: not f.dup_edges
+                and f.n_rows * f.deg_max * bc <= 512_000_000,
+                knobs={"rb": rb, "bc": bc},
+            )
+        )
+    return vs
 
 
 # ------------------------------------------------------------ registry
@@ -239,6 +349,8 @@ def candidates(
             vs += _pallas_spmm_variants(feat, interpret)
     elif feat.op == "sddmm":
         vs = _sddmm_variants(feat)
+    elif feat.op == "attention":
+        vs = _attention_variants(feat, include_pallas, interpret)
     else:
         raise KeyError(feat.op)
     return [v for v in vs if v.applicable(feat, hw)]

@@ -24,6 +24,39 @@ from repro.sparse.csr import CSR
 
 
 @dataclasses.dataclass
+class ProbeOutcome:
+    """Result of one slope-probe pass over a candidate shortlist."""
+
+    probe_ms: Dict[str, float]  # candidate full-name -> effective cost
+    best_name: Optional[str]
+    t_best_ms: float
+    t_baseline_ms: float
+    overhead_ms: float  # wall time incl. prepare + compile
+    iter_ms: float  # steady-state probe iterations only
+
+
+def default_probe_args(op: str, f: int, seed: int = 0) -> Callable[[CSR], tuple]:
+    """Random dense operands of width f, shaped for ``op``, per subgraph."""
+
+    def fn(sub: CSR) -> tuple:
+        rng = np.random.default_rng(seed)
+        if op == "spmm":
+            return (rng.standard_normal((sub.n_cols, f)).astype(np.float32),)
+        if op == "sddmm":
+            x = rng.standard_normal((sub.n_rows, f)).astype(np.float32)
+            y = rng.standard_normal((sub.n_cols, f)).astype(np.float32)
+            return (x, y)
+        if op == "attention":
+            q = rng.standard_normal((sub.n_rows, f)).astype(np.float32)
+            k = rng.standard_normal((sub.n_cols, f)).astype(np.float32)
+            v = rng.standard_normal((sub.n_cols, f)).astype(np.float32)
+            return (q, k, v)
+        raise KeyError(op)
+
+    return fn
+
+
+@dataclasses.dataclass
 class Decision:
     op: str
     choice: str  # "baseline" or variant full-name
@@ -63,6 +96,93 @@ class AutoSage:
         self.probe_frac = probe_frac if probe_frac is not None else probe_mod.DEFAULT_FRAC
         self.probe_iters = probe_iters if probe_iters is not None else probe_mod.DEFAULT_ITERS
         self.probe_cap_ms = probe_cap_ms if probe_cap_ms is not None else probe_mod.DEFAULT_CAP_MS
+        # built-runner memo: prepare() is O(nnz) host work + device upload,
+        # paid once per (graph, op, choice) instead of per forward call
+        self._runners: Dict[tuple, Callable] = {}
+
+    # ------------------------------------------------------------------
+    def probe_candidates(
+        self,
+        csr: CSR,
+        base: registry.Variant,
+        shortlist: List[registry.Variant],
+        args_fn: Callable[[CSR], tuple],
+        seed: int = 0,
+    ) -> ProbeOutcome:
+        """Slope-mode micro-probe of baseline + shortlist (paper §4.2).
+
+        Times every candidate on TWO induced subgraphs (1x and 2x rows)
+        with identical sampling. Comparing the cost *slope* between the
+        two sizes cancels each variant's fixed dispatch/launch overhead,
+        which otherwise makes small probes mispredict full-graph
+        performance (a failure mode of the paper's single-point probe we
+        hit on ER; see EXPERIMENTS.md "probe-scale bias").
+        AUTOSAGE_PROBE_MODE=point restores the paper's single-point
+        behaviour. Shared by the per-op `decide` and the pipeline-level
+        attention scheduler (core/pipeline.py), so composed candidates
+        are probed end-to-end under the exact same protocol.
+        """
+        mode = os.environ.get("AUTOSAGE_PROBE_MODE", "slope")
+        t_probe0 = time.perf_counter()
+        sub1 = probe_mod.induced_subgraph(csr, frac=self.probe_frac, seed=seed)
+        subs = [sub1]
+        if mode == "slope" and sub1.n_rows * 2 <= csr.n_rows:
+            subs.append(
+                probe_mod.induced_subgraph(csr, seed=seed, n_rows=sub1.n_rows * 2)
+            )
+        args_per_sub = [args_fn(s) for s in subs]
+        probe_ms: Dict[str, float] = {}
+        iter_ms_total = [0.0]
+
+        def _time(v: registry.Variant) -> float:
+            """Effective cost: slope between the two probe sizes (ms per
+            full-graph-equivalent), or plain median in point mode."""
+            times = []
+            for sub, args in zip(subs, args_per_sub):
+                aux = v.prepare(sub)
+                run = v.build(aux)
+                res = probe_mod.time_callable(
+                    lambda: run(*args), iters=self.probe_iters,
+                    cap_ms=self.probe_cap_ms, name=v.full_name(),
+                )
+                iter_ms_total[0] += sum(res.times_ms)
+                times.append(res.median_ms)
+            if len(times) == 2:
+                slope = (times[1] - times[0]) / max(subs[1].n_rows - subs[0].n_rows, 1)
+                if slope > 0:
+                    return slope * csr.n_rows  # extrapolated marginal cost
+            return times[-1]
+
+        tb = _time(base)
+        probe_ms["baseline"] = tb
+        best_name, t_star = None, float("inf")
+        for v in shortlist:
+            t = _time(v)
+            probe_ms[v.full_name()] = t
+            if t < t_star:
+                best_name, t_star = v.full_name(), t
+        return ProbeOutcome(
+            probe_ms=probe_ms,
+            best_name=best_name,
+            t_best_ms=t_star,
+            t_baseline_ms=tb,
+            overhead_ms=(time.perf_counter() - t_probe0) * 1e3,
+            iter_ms=iter_ms_total[0],
+        )
+
+    def shortlist(
+        self, feat: InputFeatures, cands: List[registry.Variant]
+    ) -> tuple:
+        """Estimate stage: (estimates_ms, top-k non-baseline candidates)."""
+        estimates = {
+            v.full_name(): est.estimate(feat, self.hw, v.name, v.knobs) * 1e3
+            for v in cands
+        }
+        short = sorted(
+            (v for v in cands if not v.is_baseline),
+            key=lambda v: estimates[v.full_name()],
+        )[: self.top_k]
+        return estimates, short
 
     # ------------------------------------------------------------------
     def decide(
@@ -96,84 +216,27 @@ class AutoSage:
                 probe_iter_ms=0.0, estimates_ms={},
             )
 
-        # ---- estimate stage: shortlist top-k non-baseline candidates
-        estimates = {
-            v.full_name(): est.estimate(feat, self.hw, v.name, v.knobs) * 1e3
-            for v in cands
-        }
-        shortlist = sorted(
-            (v for v in cands if not v.is_baseline),
-            key=lambda v: estimates[v.full_name()],
-        )[: self.top_k]
-
-        # ---- probe stage: TWO induced subgraphs (1x and 2x rows).
-        # Comparing the cost *slope* between the two sizes cancels each
-        # variant's fixed dispatch/launch overhead, which otherwise makes
-        # small probes mispredict full-graph performance (a failure mode
-        # of the paper's single-point probe we hit on ER; see
-        # EXPERIMENTS.md "probe-scale bias"). AUTOSAGE_PROBE_MODE=point
-        # restores the paper's single-point behaviour.
-        mode = os.environ.get("AUTOSAGE_PROBE_MODE", "slope")
-        t_probe0 = time.perf_counter()
-        sub1 = probe_mod.induced_subgraph(csr, frac=self.probe_frac, seed=seed)
-        subs = [sub1]
-        if mode == "slope" and sub1.n_rows * 2 <= csr.n_rows:
-            subs.append(
-                probe_mod.induced_subgraph(csr, seed=seed, n_rows=sub1.n_rows * 2)
+        estimates, short = self.shortlist(feat, cands)
+        if short:
+            outcome = self.probe_candidates(
+                csr, base, short,
+                probe_args_fn or default_probe_args(op, f, seed), seed=seed,
             )
+        else:
+            # no challengers: the decision can only be baseline, skip the
+            # subgraph extraction + compile + timing entirely
+            outcome = ProbeOutcome({}, None, float("inf"), 0.0, 0.0, 0.0)
 
-        def _args_for(sub):
-            if probe_args_fn is not None:
-                return probe_args_fn(sub)
-            rng = np.random.default_rng(seed)
-            if op == "spmm":
-                return (rng.standard_normal((sub.n_cols, f)).astype(np.float32),)
-            if op == "sddmm":
-                x = rng.standard_normal((sub.n_rows, f)).astype(np.float32)
-                y = rng.standard_normal((sub.n_cols, f)).astype(np.float32)
-                return (x, y)
-            raise KeyError(op)
-
-        args_per_sub = [_args_for(s) for s in subs]
-        probe_ms: Dict[str, float] = {}
-        iter_ms_total = [0.0]
-
-        def _time(v: registry.Variant) -> float:
-            """Effective cost: slope between the two probe sizes (ms per
-            full-graph-equivalent), or plain median in point mode."""
-            times = []
-            for sub, args in zip(subs, args_per_sub):
-                aux = v.prepare(sub)
-                run = v.build(aux)
-                res = probe_mod.time_callable(
-                    lambda: run(*args), iters=self.probe_iters,
-                    cap_ms=self.probe_cap_ms, name=v.full_name(),
-                )
-                iter_ms_total[0] += sum(res.times_ms)
-                times.append(res.median_ms)
-            if len(times) == 2:
-                slope = (times[1] - times[0]) / max(subs[1].n_rows - subs[0].n_rows, 1)
-                if slope > 0:
-                    return slope * csr.n_rows  # extrapolated marginal cost
-            return times[-1]
-
-        tb = _time(base)
-        probe_ms["baseline"] = tb
-        best_name, t_star = None, float("inf")
-        for v in shortlist:
-            t = _time(v)
-            probe_ms[v.full_name()] = t
-            if t < t_star:
-                best_name, t_star = v.full_name(), t
-        probe_overhead_ms = (time.perf_counter() - t_probe0) * 1e3
-
-        gr = apply_guardrail(best_name, t_star, tb, self.alpha)
+        gr = apply_guardrail(
+            outcome.best_name, outcome.t_best_ms, outcome.t_baseline_ms,
+            self.alpha,
+        )
         variant = by_name[gr.choice] if gr.accepted else base
         decision = Decision(
             op=op, choice=gr.choice, variant=variant, guardrail=gr,
-            from_cache=False, probe_ms=probe_ms,
-            probe_overhead_ms=probe_overhead_ms,
-            probe_iter_ms=iter_ms_total[0], estimates_ms=estimates,
+            from_cache=False, probe_ms=outcome.probe_ms,
+            probe_overhead_ms=outcome.overhead_ms,
+            probe_iter_ms=outcome.iter_ms, estimates_ms=estimates,
         )
         if self.cache is not None:
             self.cache.put(key, decision.to_cache_entry())
@@ -182,9 +245,16 @@ class AutoSage:
     # ------------------------------------------------------------------
     def build_runner(self, csr: CSR, decision: Decision) -> Callable:
         """Prepare the chosen variant on the FULL graph and return the
-        jitted callable."""
-        aux = decision.variant.prepare(csr)
-        return decision.variant.build(aux)
+        jitted callable (memoized per graph/op/choice)."""
+        from repro.sparse.csr import graph_signature
+
+        key = (graph_signature(csr), decision.op, decision.choice)
+        runner = self._runners.get(key)
+        if runner is None:
+            aux = decision.variant.prepare(csr)
+            runner = decision.variant.build(aux)
+            self._runners[key] = runner
+        return runner
 
     def spmm(self, csr: CSR, b, seed: int = 0):
         """One-call convenience: decide + prepare + run (paper's
@@ -195,3 +265,21 @@ class AutoSage:
     def sddmm(self, csr: CSR, x, y, seed: int = 0):
         d = self.decide(csr, int(x.shape[1]), "sddmm", seed=seed)
         return self.build_runner(csr, d)(x, y), d
+
+    # ---- pipeline-level CSR attention (core/pipeline.py) -------------
+    def decide_attention(
+        self, csr: CSR, d: int, seed: int = 0, stage_breakdown: bool = False
+    ):
+        """Joint decision over composed {sddmm x softmax x spmm} pipelines
+        and the fused Pallas kernel; cached under op="attention"."""
+        from repro.core import pipeline
+
+        return pipeline.decide_attention(
+            self, csr, d, seed=seed, stage_breakdown=stage_breakdown
+        )
+
+    def attention(self, csr: CSR, q, k, v, seed: int = 0):
+        """One-call convenience: decide_attention + prepare + run."""
+        from repro.core import pipeline
+
+        return pipeline.attention_forward(self, csr, q, k, v, seed=seed)

@@ -7,7 +7,7 @@ import json
 import os
 import platform
 from pathlib import Path
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 
@@ -33,3 +33,38 @@ def write_csv(path: str, header: Sequence[str], rows: List[Sequence]) -> None:
         w.writerows(rows)
     with open(str(p) + ".meta.json", "w") as f:
         json.dump(_meta(), f, indent=1)
+
+
+def append_jsonl(path: str, record: Dict) -> None:
+    """Append one JSON record (tagged with the device signature) to a
+    .jsonl stream; creates parent dirs on first write."""
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    with open(p, "a") as f:
+        json.dump({"device_sig": device_sig(), **record}, f, sort_keys=True)
+        f.write("\n")
+
+
+def emit_attention_decision(decision) -> Optional[str]:
+    """Per-stage breakdown stream for pipeline decisions (§8.7 analysis).
+
+    No-op unless AUTOSAGE_TELEMETRY_DIR is set, so the scheduler hot path
+    never touches the filesystem by default. Returns the path written.
+    """
+    out = os.environ.get("AUTOSAGE_TELEMETRY_DIR")
+    if not out:
+        return None
+    path = str(Path(out) / "attention_decisions.jsonl")
+    append_jsonl(
+        path,
+        {
+            "op": decision.op,
+            "choice": decision.choice,
+            "from_cache": decision.from_cache,
+            "probe_ms": decision.probe_ms,
+            "stage_ms": getattr(decision, "stage_ms", {}),
+            "estimates_ms": decision.estimates_ms,
+            "probe_overhead_ms": decision.probe_overhead_ms,
+        },
+    )
+    return path

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _fused_attn_kernel(
     colblk_ref, q_ref, k_ref, v_ref, mask_ref, out_ref,
@@ -90,7 +92,7 @@ def fused_csr_attention(
         ),
         out_shape=jax.ShapeDtypeStruct((nrb * rb, d), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
     )(colblk, q, k, v, mask)

@@ -1,0 +1,9 @@
+"""jax-version compatibility shims for Pallas TPU.
+
+Newer jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+the container pins jax 0.4.x which only has the old name. Resolve once
+here so every kernel builds on both.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams

@@ -13,6 +13,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _sddmm_kernel(colblk_ref, x_ref, y_ref, mask_ref, out_ref, *, n_f_chunks):
     j = pl.program_id(2)
@@ -61,7 +63,7 @@ def sddmm_block_ell(
         ),
         out_shape=jax.ShapeDtypeStruct((nrb, w, rb, bc), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(colblk, x, y, mask)

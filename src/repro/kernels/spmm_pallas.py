@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _spmm_kernel(colblk_ref, vals_ref, b_ref, out_ref):
     k = pl.program_id(2)
@@ -62,7 +64,7 @@ def spmm_block_ell(
         ),
         out_shape=jax.ShapeDtypeStruct((nrb * rb, f), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(colblk, vals, b)

@@ -134,3 +134,71 @@ def csr_attention(
     aux: Dict, q: jax.Array, k: jax.Array, v: jax.Array, scale=None
 ) -> jax.Array:
     return ref.csr_attention_ref(aux["rowptr"], aux["colind"], q, k, v, scale)
+
+
+# ------------------------------------------- composed attention pipelines
+# The pipeline scheduler (core/pipeline.py) selects among these whole
+# SDDMM -> row-softmax -> SpMM compositions; each stays in one sparse
+# layout per stage, with explicit layout conversion for mixed pairs.
+
+def prepare_edge_slots(csr: CSR) -> Dict[str, np.ndarray]:
+    """(row, slot-within-row) of every nnz entry — the scatter/gather
+    indices that convert per-edge CSR values to/from the (n, K) ELL table."""
+    deg = csr.degrees
+    rows = np.repeat(np.arange(csr.n_rows), deg).astype(np.int32)
+    slot = (np.arange(csr.nnz) - np.repeat(csr.rowptr[:-1], deg)).astype(np.int32)
+    return {"edge_row": rows, "edge_slot": slot}
+
+
+def ell_masked_softmax(logits: jax.Array, mask: jax.Array) -> jax.Array:
+    """Row softmax over the (n, K) ELL table; padded slots -> 0."""
+    neg = jnp.finfo(logits.dtype).min
+    masked = jnp.where(mask, logits, neg)
+    m = jnp.max(masked, axis=1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(masked - m) * mask
+    return e / jnp.maximum(jnp.sum(e, axis=1, keepdims=True), 1e-30)
+
+
+def attention_csr(aux: Dict, q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """gather_dot SDDMM -> CSR softmax -> gather_segsum SpMM (baseline)."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = ref.sddmm_ref(aux["rowptr"], aux["colind"], q, k) * scale
+    probs = ref.row_softmax_ref(aux["rowptr"], aux["colind"], logits)
+    return ref.spmm_ref(aux["rowptr"], aux["colind"], probs, v)
+
+
+def attention_ell(aux: Dict, q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """row_ell SDDMM -> ELL softmax -> row_ell SpMM; uniform-width gathers
+    throughout (wins when degree variance is low, as with spmm row_ell)."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    colind = aux["colind"]  # (n, K)
+    mask = aux["val"] != 0
+    gathered_k = k[colind]  # (n, K, F)
+    logits = jnp.einsum("nf,nkf->nk", q.astype(gathered_k.dtype), gathered_k) * scale
+    probs = ell_masked_softmax(logits, mask)
+    return jnp.einsum("nk,nkf->nf", probs, v[colind].astype(probs.dtype))
+
+
+def attention_ell_to_csr(aux: Dict, q, k, v) -> jax.Array:
+    """row_ell SDDMM/softmax -> (ELL->CSR gather) -> gather_segsum SpMM."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    colind = aux["ell_colind"]
+    mask = aux["ell_val"] != 0
+    gathered_k = k[colind]
+    logits = jnp.einsum("nf,nkf->nk", q.astype(gathered_k.dtype), gathered_k) * scale
+    probs = ell_masked_softmax(logits, mask)
+    probs_csr = probs[aux["edge_row"], aux["edge_slot"]]
+    return ref.spmm_ref(aux["rowptr"], aux["colind"], probs_csr, v)
+
+
+def attention_csr_to_ell(aux: Dict, q, k, v) -> jax.Array:
+    """gather_dot SDDMM/softmax -> (CSR->ELL scatter) -> row_ell SpMM."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = ref.sddmm_ref(aux["rowptr"], aux["colind"], q, k) * scale
+    probs = ref.row_softmax_ref(aux["rowptr"], aux["colind"], logits)
+    ell_colind = aux["ell_colind"]  # (n, K)
+    probs_ell = jnp.zeros(ell_colind.shape, probs.dtype).at[
+        aux["edge_row"], aux["edge_slot"]
+    ].set(probs)
+    return jnp.einsum("nk,nkf->nf", probs_ell, v[ell_colind].astype(probs.dtype))

@@ -8,21 +8,26 @@ module never touches jax device state. Single pod = 16x16 = 256 chips
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.6; 0.4.x (the offline container) has neither the enum
+    from jax.sharding import AxisType  # nor make_mesh(axis_types=...)
+except ImportError:
+    AxisType = None
+
+
+def _auto_mesh(shape, axes) -> jax.sharding.Mesh:
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _auto_mesh(shape, axes)
 
 
 def make_host_mesh() -> jax.sharding.Mesh:
     """Degenerate mesh over whatever devices exist (tests/examples)."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (1, n, 1), ("pod", "data", "model"),
-        axis_types=(AxisType.Auto,) * 3,
-    )
+    return _auto_mesh((1, n, 1), ("pod", "data", "model"))

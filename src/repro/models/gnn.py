@@ -75,11 +75,23 @@ def init_gat(cfg: ArchConfig, key, in_dim: int, dtype=jnp.float32) -> Dict:
     }
 
 
-def gat_layer(params: Dict, csr: CSR, x: jax.Array) -> jax.Array:
-    """Dot-product graph attention = the paper's CSR-attention pipeline."""
+def gat_layer(
+    params: Dict, csr: CSR, x: jax.Array, sage: Optional[AutoSage] = None
+) -> jax.Array:
+    """Dot-product graph attention = the paper's CSR-attention pipeline.
+
+    With a scheduler supplied, the whole SDDMM -> softmax -> SpMM
+    composition goes through the pipeline-level decision
+    (`AutoSage.attention`), which picks between composed 3-kernel
+    candidates and the fused Pallas kernel per input; without one, the
+    XLA reference pipeline runs.
+    """
     q = x @ params["wq"]
     k = x @ params["wk"]
     v = x @ params["wv"]
+    if sage is not None:
+        out, _ = sage.attention(csr, q, k, v)
+        return out.astype(x.dtype)
     return ref.csr_attention_ref(
         jnp.asarray(csr.rowptr), jnp.asarray(csr.colind), q, k, v
     )

@@ -90,6 +90,49 @@ class CSR:
         return CSR(new_rowptr, new_colind, new_val, rows.shape[0], self.n_cols)
 
 
+    def has_duplicate_edges(self) -> bool:
+        """True if some (row, col) pair is stored more than once.
+
+        SpMM semantics accumulate duplicates, but attention masking does
+        not: block-ELL conversion merges duplicates into one mask entry,
+        so fused attention and the 3-kernel pipeline diverge on
+        multigraphs. The scheduler gates the fused variant on this.
+        Sort-independent (validate() never enforces within-row order).
+        """
+        if self.nnz < 2:
+            return False
+        memo = getattr(self, "_dup_memo", None)
+        if memo is None:
+            rows = np.repeat(np.arange(self.n_rows, dtype=np.int64), self.degrees)
+            key = rows * self.n_cols + self.colind.astype(np.int64)
+            memo = bool(np.unique(key).size != self.nnz)
+            # memoized: feature extraction runs per decide (incl. warm-cache
+            # hits in training loops)
+            object.__setattr__(self, "_dup_memo", memo)
+        return memo
+
+    def dedup_edges(self) -> "CSR":
+        """Collapse duplicate (row, col) entries, summing their values.
+
+        Attention treats the sparsity pattern as a set of edges; use this
+        to canonicalize generator output (which samples columns with
+        replacement) before running the attention pipeline.
+        """
+        rows = np.repeat(np.arange(self.n_rows, dtype=np.int64), self.degrees)
+        key = rows * self.n_cols + self.colind.astype(np.int64)
+        uniq, inv = np.unique(key, return_inverse=True)
+        new_rows = (uniq // self.n_cols).astype(np.int32)
+        new_cols = (uniq % self.n_cols).astype(np.int32)
+        new_val = None
+        if self.val is not None:
+            new_val = np.zeros(uniq.shape[0], dtype=self.val.dtype)
+            np.add.at(new_val, inv, self.val)
+        rowptr = np.zeros(self.n_rows + 1, dtype=np.int32)
+        np.add.at(rowptr[1:], new_rows, 1)
+        np.cumsum(rowptr, out=rowptr)
+        return CSR(rowptr, new_cols, new_val, self.n_rows, self.n_cols)
+
+
 def csr_from_coo(
     rows: np.ndarray,
     cols: np.ndarray,
@@ -129,7 +172,11 @@ def graph_signature(csr: CSR) -> str:
 
     Hashes the structure (rowptr/colind) but not values: the paper keys
     on graph structure + (F, op, device); values change per step.
+    Memoized per CSR object: it runs on every decide and runner lookup.
     """
+    memo = getattr(csr, "_sig_memo", None)
+    if memo is not None:
+        return memo
     h = hashlib.sha256()
     h.update(np.int64([csr.n_rows, csr.n_cols, csr.nnz]).tobytes())
     h.update(np.ascontiguousarray(csr.rowptr, dtype=np.int64).tobytes())
@@ -140,4 +187,6 @@ def graph_signature(csr: CSR) -> str:
         h.update(ci[-1024:].tobytes())
     else:
         h.update(ci.tobytes())
-    return h.hexdigest()[:16]
+    sig = h.hexdigest()[:16]
+    object.__setattr__(csr, "_sig_memo", sig)
+    return sig

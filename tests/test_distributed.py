@@ -2,19 +2,33 @@
 main pytest process must keep a single device): EP MoE vs reference,
 compressed cross-pod psum with error feedback, elastic checkpoint restore
 onto a different mesh, sharding-rule sanitization."""
+import os
 import subprocess
 import sys
 from pathlib import Path
 
+import jax
 import numpy as np
 import pytest
+
+# every test here builds meshes with explicit axis types; jax 0.4.x
+# (the offline container's pin) predates jax.sharding.AxisType, so gate
+# the module on the API rather than fail with AttributeError / hang the
+# 8-fake-device subprocesses
+pytestmark = pytest.mark.skipif(
+    not hasattr(jax.sharding, "AxisType"),
+    reason="requires jax.sharding.AxisType (jax >= 0.6)",
+)
 
 SRC = str(Path(__file__).resolve().parent.parent / "src")
 
 
 def _run(script: str) -> subprocess.CompletedProcess:
     env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/tmp",
-           "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           # never drop the platform pin: without it jax probes for a TPU
+           # via the GCE metadata server, ~200 s of retries per subprocess
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
     return subprocess.run(
         [sys.executable, "-c", script], capture_output=True, text=True,
         env=env, timeout=420,

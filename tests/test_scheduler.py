@@ -5,7 +5,11 @@ import tempfile
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline container; CI installs the real thing
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
     AutoSage,

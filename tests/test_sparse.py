@@ -1,7 +1,11 @@
 """CSR / BlockELL container invariants + generators (property-based)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline container; CI installs the real thing
+    from _hypothesis_fallback import given, settings, st
 
 from repro.sparse import (
     CSR,

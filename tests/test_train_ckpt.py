@@ -1,5 +1,6 @@
 """Training loop behaviour: loss decreases; checkpoint save/restore;
 fault tolerance via the real driver (crash + resume)."""
+import os
 import subprocess
 import sys
 from pathlib import Path
@@ -22,12 +23,12 @@ def test_loss_decreases_tiny_lm():
     cfg = reduced(get_config("qwen3_14b"))
     state = init_train_state(cfg, jax.random.PRNGKey(0), jnp.float32)
     step = jax.jit(
-        make_train_step(cfg, AdamWConfig(lr=1e-3, total_steps=40, warmup_steps=5)),
+        make_train_step(cfg, AdamWConfig(lr=3e-3, total_steps=70, warmup_steps=5)),
         donate_argnums=(0,),
     )
     pipe = PipelineState(0, 0)
     losses = []
-    for i in range(30):
+    for i in range(60):
         batch = token_batch(cfg, 4, 64, pipe)
         pipe.step += 1
         state, m = step(state, batch)
@@ -80,7 +81,10 @@ def test_crash_and_resume_driver(tmp_path):
         "--reduced", "--steps", "30", "--batch", "2", "--seq", "32",
         "--ckpt-dir", ck, "--ckpt-every", "10", "--log-every", "50",
     ]
-    env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/tmp"}
+    env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/tmp",
+           # never drop the platform pin: without it jax probes for a TPU
+           # via the GCE metadata server, ~200 s of retries per subprocess
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
     r1 = subprocess.run(cmd + ["--crash-at", "25"], capture_output=True, text=True, env=env)
     assert r1.returncode == 17, r1.stderr[-2000:]  # simulated crash
     assert ckpt_mod.latest_step(ck) == 20
