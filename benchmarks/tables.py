@@ -15,17 +15,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AutoSage, ScheduleCache
+from repro.core import AutoSage, BatchScheduler, ReplayMiss, ScheduleCache
 from repro.core.features import InputFeatures, HardwareSpec
 from repro.core.probe import time_callable
-from repro.core.telemetry import write_csv
+from repro.core.telemetry import append_jsonl, write_csv
 from repro.core import registry
 from repro.kernels import ref
 from repro.sparse import (
     erdos_renyi,
+    fixed_degree,
     hub_skew,
     products_like,
     reddit_like,
+    sample_subgraph_stream,
 )
 from repro.sparse.csr import CSR
 from repro.sparse.generators import table10_graph
@@ -270,6 +272,157 @@ def csr_attention_pipeline(full: bool = False) -> List[Tuple]:
     return rows
 
 
+def _stream_regimes(n: int, seed: int = 0) -> List[CSR]:
+    """<= 8 degree regimes, chosen mid-bin so sampled subgraphs of one
+    regime canonicalize into one schedule bucket (log2/log10 binning)."""
+    parents = [
+        fixed_degree(n, d, seed=seed + i)
+        for i, d in enumerate((3, 6, 12, 24, 48, 96))
+    ]
+    # two heavy-tailed regimes: the hub split / ELL-gating decisions flip
+    parents.append(hub_skew(n, 6, 0.10, 60, seed=seed + 6))
+    parents.append(hub_skew(n, 6, 0.10, 200, seed=seed + 7))
+    return parents
+
+
+def _run_stream(scheduler, stream, f: int, checkpoints) -> Dict[int, float]:
+    """Decide the whole stream; cumulative decide wall-clock (ms) at each
+    checkpoint stream length."""
+    cum: Dict[int, float] = {}
+    total = 0.0
+    for i, g in enumerate(stream):
+        t0 = time.perf_counter()
+        scheduler.decide(g, f, "spmm")
+        total += (time.perf_counter() - t0) * 1e3
+        if (i + 1) in checkpoints:
+            cum[i + 1] = total
+    return cum
+
+
+def batch_stream(full: bool = False) -> List[Tuple]:
+    """Probe-overhead amortization: a stream of sampled subgraphs decided
+    per-graph (every unseen graph_sig probes) vs through `BatchScheduler`
+    (one probe per schedule bucket under a shared budget). Cumulative
+    decide overhead at stream prefixes shows the batch path flattening
+    once every bucket is probed — sub-linear in stream length — while the
+    per-graph path stays linear."""
+    n_graphs = 256 if full else 64
+    parents = _stream_regimes(8192 if full else 4096)
+    stream = sample_subgraph_stream(
+        parents, n_graphs, rows_per_graph=1024 if full else 384, seed=1
+    )
+    f = 32
+    checkpoints = {n_graphs // 4, n_graphs // 2, n_graphs}
+
+    per_graph = AutoSage(
+        cache=ScheduleCache(path=None), probe_iters=1, probe_cap_ms=50,
+        probe_frac=0.25,
+    )
+    cum_pg = _run_stream(per_graph, stream, f, checkpoints)
+
+    batch = BatchScheduler(
+        AutoSage(cache=ScheduleCache(path=None), probe_iters=1,
+                 probe_cap_ms=50, probe_frac=0.25),
+        probe_budget_ms=10_000,
+    )
+    cum_b = _run_stream(batch, stream, f, checkpoints)
+    stats = batch.finalize()
+
+    rows: List[Tuple] = []
+    for k in sorted(checkpoints):
+        pg, b = cum_pg[k], cum_b[k]
+        rows.append(
+            ("per_graph", k, round(pg, 1), k, 0, round(k / max(pg, 1e-9) * 1e3, 1), "-")
+        )
+        rows.append(
+            ("batched", k, round(b, 1), stats["probes_run"] if k == n_graphs else "-",
+             k - stats["probes_run"] if k == n_graphs else "-",
+             round(k / max(b, 1e-9) * 1e3, 1), round(pg / max(b, 1e-9), 3))
+        )
+    for mode, k, cum_ms, probes, avoided, dps, sp in rows:
+        print(f"  [batch-stream] {mode:10s} k={k:4d} cum_decide={cum_ms:10.1f}ms "
+              f"probes={probes} avoided={avoided} decides/s={dps} speedup={sp}")
+    print(f"  [batch-stream] batched: {stats['buckets']} buckets over "
+          f"{stats['decides']} decides, probe budget spent "
+          f"{stats['probe_spent_ms']:.0f}/{stats['probe_budget_ms']:.0f}ms")
+    for rec in batch.bucket_stats():
+        append_jsonl(f"{OUT}/batch_stream_buckets.jsonl", rec)
+    write_csv(
+        f"{OUT}/batch_stream.csv",
+        ["mode", "k", "cum_decide_ms", "probes", "probes_avoided",
+         "decides_per_s", "speedup_vs_per_graph"],
+        rows,
+    )
+    return rows
+
+
+def batch_smoke(full: bool = False) -> List[Tuple]:
+    """Seconds-fast batched-decide check for CI: >= 64 sampled subgraphs
+    from <= 8 regimes must cost <= 8 probe passes (one per bucket), give
+    oracle-correct results, and replay bit-identically from the recorded
+    bucket decisions under replay-only mode."""
+    del full
+    import tempfile
+
+    parents = _stream_regimes(2048)[:4]
+    stream = sample_subgraph_stream(parents, 64, rows_per_graph=256, seed=2)
+    f = 16
+    with tempfile.TemporaryDirectory() as tmp:
+        path = f"{tmp}/cache.json"
+        sage = AutoSage(
+            cache=ScheduleCache(path=path), probe_iters=1, probe_cap_ms=25,
+            probe_frac=0.25,
+        )
+        rng = np.random.default_rng(0)
+        with BatchScheduler(sage, probe_budget_ms=10_000) as bs:
+            for g in stream:
+                bs.decide(g, f, "spmm")
+            # scheduled result == oracle on one stream element
+            g0 = stream[0]
+            b = jnp.asarray(
+                rng.standard_normal((g0.n_cols, f)).astype(np.float32)
+            )
+            out, _ = bs.spmm(g0, b)
+            exp = ref.spmm_ref(
+                jnp.asarray(g0.rowptr), jnp.asarray(g0.colind), None, b
+            )
+            np.testing.assert_allclose(
+                np.asarray(out), np.asarray(exp), rtol=2e-3, atol=2e-3
+            )
+        stats = bs.stats()
+        assert stats["probes_run"] <= 8, stats
+        assert stats["buckets"] <= 8, stats
+        finals = {r["bucket"]: r["choice"] for r in bs.bucket_stats()}
+
+        # replay: recorded bucket decisions serve the whole stream without
+        # a single probe, bit-identically with the finalized choices
+        replay = BatchScheduler(
+            AutoSage(cache=ScheduleCache(path=path, replay_only=True))
+        )
+        for g in stream:
+            replay.decide(g, f, "spmm")
+        assert replay.stats()["probes_run"] == 0
+        for ev in replay.trace:
+            assert ev["choice"] == finals[ev["bucket"]], ev
+        try:
+            replay.decide(erdos_renyi(3000, 1e-3, seed=9), f, "spmm")
+            raise AssertionError("replay-only decide on unseen bucket must raise")
+        except ReplayMiss:
+            pass
+
+    rows = [
+        ("batched", stats["decides"], stats["buckets"], stats["probes_run"],
+         stats["probes_avoided"]),
+        ("replay", 64, replay.stats()["buckets"], 0, 64),
+    ]
+    for mode, decides, buckets, probes, avoided in rows:
+        print(f"  [batch-smoke] {mode:8s} decides={decides} buckets={buckets} "
+              f"probes={probes} avoided={avoided}")
+    write_csv(f"{OUT}/batch_smoke.csv",
+              ["mode", "decides", "buckets", "probes", "probes_avoided"], rows)
+    return rows
+
+
 def smoke(full: bool = False) -> List[Tuple]:
     """Seconds-fast bit-rot check for CI (--smoke): one scheduled SpMM and
     one pipeline-level attention decision on tiny graphs, results checked
@@ -316,9 +469,11 @@ ALL_TABLES = {
     "table10_split": table_split,
     "probe_overhead": probe_overhead,
     "csr_attention": csr_attention_pipeline,
+    "batch_stream": batch_stream,
 }
 
-# run only via --smoke (CI) or --only smoke; not part of the default sweep
+# run only via --smoke (CI) or --only <name>; not part of the default sweep
 SMOKE_TABLES = {
     "smoke": smoke,
+    "batch_smoke": batch_smoke,
 }

@@ -1,7 +1,17 @@
 """End-to-end GNN training on a synthetic Reddit-shaped graph — the
 paper's own workload, with AutoSAGE-scheduled aggregation.
 
+Full-graph training (default):
+
     PYTHONPATH=src python examples/train_gnn.py [--epochs 30]
+
+Minibatch training through the batch scheduler — every step samples an
+induced subgraph, and `BatchScheduler` shares bucketed schedule
+decisions and one probe budget across the whole stream instead of
+probing per subgraph:
+
+    PYTHONPATH=src python examples/train_gnn.py --minibatch 1024 \
+        --epochs 5 --probe-budget-ms 2000
 """
 import argparse
 import sys
@@ -14,30 +24,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core import AutoSage, ScheduleCache
-from repro.models.gnn import init_gnn, sage_forward
+from repro.core import AutoSage, BatchScheduler, ScheduleCache
+from repro.models.gnn import init_gnn, sage_forward, sage_minibatch_forward
 from repro.sparse import reddit_like
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--epochs", type=int, default=30)
-    ap.add_argument("--scale", type=float, default=0.01)
-    args = ap.parse_args()
-
-    cfg = get_config("gnn_sage")
-    graph = reddit_like(scale=args.scale)
-    n, classes, in_dim = graph.n_rows, 16, 64
-    rng = np.random.default_rng(0)
+def make_data(graph, classes, in_dim, seed=0):
+    n = graph.n_rows
+    rng = np.random.default_rng(seed)
     # synthetic node features + labels with graph-correlated signal
     feats = rng.standard_normal((n, in_dim)).astype(np.float32)
-    labels = (feats[:, 0] * 3 + rng.standard_normal(n) * 0.3)
-    labels = np.digitize(labels, np.quantile(labels, np.linspace(0, 1, classes + 1)[1:-1])).astype(np.int32)
+    labels = feats[:, 0] * 3 + rng.standard_normal(n) * 0.3
+    labels = np.digitize(
+        labels, np.quantile(labels, np.linspace(0, 1, classes + 1)[1:-1])
+    ).astype(np.int32)
+    return jnp.asarray(feats), jnp.asarray(labels)
 
+
+def train_full(args, cfg, graph, x, y, classes, in_dim):
     sage = AutoSage(cache=ScheduleCache(path=None))
     params = init_gnn(cfg, jax.random.PRNGKey(0), in_dim, classes)
-    x = jnp.asarray(feats)
-    y = jnp.asarray(labels)
 
     def loss_fn(p):
         logits = sage_forward(p, graph, x)  # AutoSAGE inside would re-probe
@@ -55,6 +61,75 @@ def main():
     # show what the scheduler picks for this graph at this width
     d = sage.decide(graph, cfg.d_model, "spmm")
     print(f"scheduler choice for aggregation at F={cfg.d_model}: {d.choice}")
+
+
+def train_minibatch(args, cfg, graph, x, y, classes, in_dim):
+    """Sampled-subgraph training: one BatchScheduler serves the whole
+    stream of per-step induced subgraphs (one probe per schedule bucket,
+    provisional baseline until the budget reaches a bucket)."""
+    sage = AutoSage(
+        cache=ScheduleCache(path=args.cache or None),
+        probe_iters=2, probe_cap_ms=200, probe_frac=0.25,
+    )
+    params = init_gnn(cfg, jax.random.PRNGKey(0), in_dim, classes)
+    rng = np.random.default_rng(1)
+    lr, t0 = 0.05, time.time()
+    steps_per_epoch = max(1, graph.n_rows // args.minibatch)
+
+    with BatchScheduler(sage, probe_budget_ms=args.probe_budget_ms) as bs:
+        for epoch in range(args.epochs):
+            losses = []
+            for _ in range(steps_per_epoch):
+                rows = np.sort(
+                    rng.choice(graph.n_rows, size=args.minibatch, replace=False)
+                )
+                sub = graph.row_slice(rows)
+                yb = y[jnp.asarray(rows)]
+
+                def loss_fn(p):
+                    logits = sage_minibatch_forward(p, sub, rows, x, sage=bs)
+                    logp = jax.nn.log_softmax(logits)
+                    return -jnp.take_along_axis(logp, yb[:, None], 1).mean()
+
+                loss, g = jax.value_and_grad(loss_fn)(params)
+                params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+                losses.append(float(loss))
+            print(
+                f"epoch {epoch:3d} loss {np.mean(losses):.4f} "
+                f"({time.time()-t0:.1f}s)  stream={bs.stats()}"
+            )
+    s = bs.stats()
+    print(
+        f"batched decide: {s['decides']} decides -> {s['buckets']} buckets, "
+        f"{s['probes_run']} probes ({s['probes_avoided']} avoided), "
+        f"probe budget spent {s['probe_spent_ms']:.0f}/"
+        f"{s['probe_budget_ms']:.0f}ms"
+    )
+    for row in bs.bucket_stats():
+        print(f"  bucket {row['bucket']}: hits={row['hits']} choice={row['choice']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=30)
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--minibatch", type=int, default=0,
+                    help="rows per sampled subgraph; 0 = full-graph training")
+    ap.add_argument("--probe-budget-ms", type=float, default=2000.0,
+                    help="shared probe budget for the minibatch stream")
+    ap.add_argument("--cache", default="",
+                    help="schedule cache path (minibatch mode); empty = in-memory")
+    args = ap.parse_args()
+
+    cfg = get_config("gnn_sage")
+    graph = reddit_like(scale=args.scale)
+    classes, in_dim = 16, 64
+    x, y = make_data(graph, classes, in_dim)
+
+    if args.minibatch:
+        train_minibatch(args, cfg, graph, x, y, classes, in_dim)
+    else:
+        train_full(args, cfg, graph, x, y, classes, in_dim)
 
 
 if __name__ == "__main__":

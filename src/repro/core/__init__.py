@@ -4,22 +4,32 @@ Pipeline: features -> roofline estimate shortlist -> on-device micro-probe
 on an induced subgraph -> guardrail (never regress, Prop. 1) -> persistent
 cache with deterministic replay.
 """
-from repro.core.features import HardwareSpec, InputFeatures, device_sig
+from repro.core.features import (
+    HardwareSpec,
+    InputFeatures,
+    ScheduleBucket,
+    device_sig,
+)
 from repro.core.scheduler import AutoSage, Decision, ProbeOutcome
-from repro.core.cache import ScheduleCache, ReplayMiss
+from repro.core.cache import CacheKey, ScheduleCache, ReplayMiss, parse_key
 from repro.core.guardrail import apply_guardrail, GuardrailDecision
 from repro.core.pipeline import AttentionDecision
+from repro.core.batch import BatchScheduler
 
 __all__ = [
     "AutoSage",
     "AttentionDecision",
+    "BatchScheduler",
+    "CacheKey",
     "Decision",
     "HardwareSpec",
     "InputFeatures",
     "ProbeOutcome",
+    "ScheduleBucket",
     "ScheduleCache",
     "ReplayMiss",
     "apply_guardrail",
     "GuardrailDecision",
     "device_sig",
+    "parse_key",
 ]

@@ -1,0 +1,351 @@
+"""Batched multi-graph scheduling: bucketed decisions under one probe budget.
+
+`AutoSage.decide` is priced for one graph at a time: feature extraction
+is cheap, but every cache miss pays an induced-subgraph probe. The
+workload the paper targets — minibatched GNN training — serves thousands
+of induced subgraphs per epoch, each slightly different, so per-graph
+probing either dominates step time or (with per-graph exact cache keys)
+never warms the cache at all. Dai et al. ("Heuristic Adaptability to
+Input Dynamics for SpMM on GPUs") and ParamSpMM both show the winning
+mapping is stable across coarse feature regimes; `BatchScheduler`
+exploits exactly that:
+
+  1. every incoming graph's `InputFeatures` canonicalize into a coarse
+     `ScheduleBucket` (log-binned n_rows/nnz, quantized skew/density,
+     exact F/op/device — core/features.py), so near-identical sampled
+     subgraphs share one decision;
+  2. probing is amortized under a shared per-stream probe-time budget:
+     unprobed buckets run the vendor baseline provisionally (guardrail-
+     safe — the provisional choice is exactly the guardrail fallback),
+     pending buckets are prioritized by traffic-weighted estimated gain
+     (hits x roofline headroom), and each bucket's decision upgrades in
+     place once its probe completes;
+  3. every decide is recorded in a stream trace, and `finalize()` pins
+     all bucket decisions into the cache (schema v3 bucket keys,
+     core/cache.py) so an entire epoch of bucketed decisions replays
+     deterministically under AUTOSAGE_REPLAY_ONLY=1.
+
+Entry points mirror the per-graph scheduler (`decide` / `build_runner` /
+`spmm` / `sddmm` / `attention`), so model code written against `AutoSage`
+(e.g. models/gnn.py) takes a `BatchScheduler` unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+import zlib
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core import registry, telemetry
+from repro.core.cache import ScheduleCache
+from repro.core.features import InputFeatures, ScheduleBucket, device_sig
+from repro.core.scheduler import AutoSage, Decision
+from repro.sparse.csr import CSR
+
+DEFAULT_PROBE_BUDGET_MS = float(os.environ.get("AUTOSAGE_BATCH_BUDGET_MS", "2000"))
+
+
+@dataclasses.dataclass
+class _BucketState:
+    """Everything the stream knows about one schedule bucket."""
+
+    bucket: ScheduleBucket
+    key: str  # bucket-level cache key
+    rep_csr: CSR  # first graph seen: the probe representative
+    rep_feat: InputFeatures
+    base: registry.Variant
+    by_name: Dict[str, registry.Variant]
+    estimates_ms: Dict[str, float]
+    est_gain_ms: float  # roofline headroom: baseline est - best challenger est
+    has_challengers: bool
+    hits: int = 0
+    probed: bool = False  # a final (probed or cached) decision exists
+    decision: Optional[Decision] = None  # None => provisional baseline
+    provisional: Optional[Decision] = None
+    probe_charge_ms: float = 0.0
+
+    def current(self) -> Decision:
+        return self.decision if self.decision is not None else self.provisional
+
+    def priority(self) -> tuple:
+        """Traffic-weighted estimated gain; positive-headroom buckets
+        always outrank zero-headroom ones, ties break on traffic."""
+        gain = max(self.est_gain_ms, 0.0)
+        return (gain > 0.0, self.hits * gain, self.hits)
+
+
+class BatchScheduler:
+    """Serves a stream of graphs through bucketed, budgeted decisions.
+
+    Wraps (and shares the cache/hardware spec of) an `AutoSage`. Use as a
+    context manager — or call `finalize()` — at the end of a stream/epoch
+    so every bucket decision (including still-provisional baselines) is
+    pinned into the cache for deterministic replay.
+    """
+
+    def __init__(
+        self,
+        sage: Optional[AutoSage] = None,
+        probe_budget_ms: float = DEFAULT_PROBE_BUDGET_MS,
+        max_probes_per_decide: int = 1,
+        auto_pump: bool = True,
+        seed: int = 0,
+    ):
+        self.sage = sage if sage is not None else AutoSage()
+        self.cache: ScheduleCache = self.sage.cache
+        self.probe_budget_ms = probe_budget_ms
+        self.max_probes_per_decide = max_probes_per_decide
+        self.auto_pump = auto_pump
+        self.seed = seed
+        self._device = device_sig()
+        self._buckets: Dict[str, _BucketState] = {}
+        self.probe_spent_ms = 0.0
+        self.trace: List[Dict[str, Any]] = []
+        self._decides = 0
+        self._probe_passes = 0
+        self._decide_wall_ms = 0.0
+
+    # ---------------------------------------------------------- decide
+    def decide(self, csr: CSR, f: int, op: str) -> Decision:
+        """Bucketed decide: O(feature extraction) on the hot path; any
+        probing is pulled from the shared budget (at most
+        `max_probes_per_decide` bucket probes per call)."""
+        t0 = time.perf_counter()
+        feat = InputFeatures.from_csr(csr, f, op)
+        bucket = ScheduleBucket.from_features(feat, self._device)
+        key = ScheduleCache.bucket_key(
+            self._device, bucket.sig(), f, op, self.sage.alpha
+        )
+        st = self._buckets.get(key)
+        if st is None:
+            st = self._open_bucket(bucket, key, csr, feat)
+            self._buckets[key] = st
+        st.hits += 1
+        self._decides += 1
+        if self.auto_pump and not self.cache.replay_only:
+            self.pump(self.max_probes_per_decide)
+        d = st.current()
+        source = (
+            "bucket-cache" if (st.probed and st.decision is not None
+                               and st.decision.from_cache)
+            else "probe" if st.probed
+            else "provisional"
+        )
+        self._decide_wall_ms += (time.perf_counter() - t0) * 1e3
+        self._record(st, d, source)
+        return d
+
+    def _open_bucket(
+        self, bucket: ScheduleBucket, key: str, csr: CSR, feat: InputFeatures
+    ) -> _BucketState:
+        cands = registry.candidates(feat, self.sage.hw)
+        base = registry.baseline(feat, self.sage.hw)
+        by_name = {v.full_name(): v for v in cands}
+        by_name["baseline"] = base
+
+        # replay / warm-start: a pinned bucket decision ends the story.
+        # In replay-only mode a miss raises ReplayMiss — the contract.
+        cached = self.cache.get(key)
+        if cached is not None:
+            choice = cached["choice"]
+            decision = Decision(
+                op=feat.op, choice=choice, variant=by_name.get(choice, base),
+                guardrail=None, from_cache=True, probe_ms={},
+                probe_overhead_ms=0.0, probe_iter_ms=0.0, estimates_ms={},
+            )
+            return _BucketState(
+                bucket=bucket, key=key, rep_csr=csr, rep_feat=feat, base=base,
+                by_name=by_name, estimates_ms={}, est_gain_ms=0.0,
+                has_challengers=False, probed=True, decision=decision,
+            )
+
+        estimates, short = self.sage.shortlist(feat, cands)
+        gain = 0.0
+        if short:
+            t_base_est = estimates.get(base.full_name(), float("inf"))
+            t_best_est = min(estimates[v.full_name()] for v in short)
+            gain = t_base_est - t_best_est
+        provisional = Decision(
+            op=feat.op, choice="baseline", variant=base, guardrail=None,
+            from_cache=False, probe_ms={}, probe_overhead_ms=0.0,
+            probe_iter_ms=0.0, estimates_ms=estimates,
+        )
+        st = _BucketState(
+            bucket=bucket, key=key, rep_csr=csr, rep_feat=feat, base=base,
+            by_name=by_name, estimates_ms=estimates, est_gain_ms=gain,
+            has_challengers=bool(short), provisional=provisional,
+        )
+        if not short:
+            # no applicable challengers: baseline is final, never probe
+            st.probed = True
+            st.decision = provisional
+        return st
+
+    # ----------------------------------------------------------- probes
+    def pending(self) -> List[_BucketState]:
+        return [s for s in self._buckets.values() if not s.probed]
+
+    def pump(self, max_probes: Optional[int] = None) -> int:
+        """Probe the highest-priority pending buckets while budget
+        remains; returns how many bucket probes ran. Decisions upgrade
+        in place: later decides on a pumped bucket see its probed
+        choice."""
+        if self.cache.replay_only:
+            return 0
+        ran = 0
+        while max_probes is None or ran < max_probes:
+            if self.probe_spent_ms >= self.probe_budget_ms:
+                break
+            pend = self.pending()
+            if not pend:
+                break
+            st = max(pend, key=_BucketState.priority)
+            self._probe_bucket(st)
+            ran += 1
+        return ran
+
+    def _probe_bucket(self, st: _BucketState) -> None:
+        """Run the full per-graph decision procedure on the bucket's
+        representative graph and pin the outcome for the whole bucket."""
+        seed = self._bucket_seed(st)
+        with self.cache:  # defer flushing: exact + bucket puts -> one write
+            if st.rep_feat.op == "attention":
+                d = self.sage.decide_attention(st.rep_csr, st.rep_feat.f, seed=seed)
+            else:
+                d = self.sage.decide(
+                    st.rep_csr, st.rep_feat.f, st.rep_feat.op, seed=seed
+                )
+            self.cache.put(st.key, self._bucket_entry(st, d))
+        st.probed = True
+        st.decision = d
+        st.probe_charge_ms = d.probe_overhead_ms  # 0 on an exact-key hit
+        self.probe_spent_ms += st.probe_charge_ms
+        self._probe_passes += 1
+        telemetry.emit_batch_event(
+            {
+                "event": "bucket_probe",
+                "bucket": st.bucket.sig(),
+                "op": st.rep_feat.op,
+                "f": st.rep_feat.f,
+                "choice": d.choice,
+                "probe_overhead_ms": d.probe_overhead_ms,
+                "budget_spent_ms": self.probe_spent_ms,
+                "budget_ms": self.probe_budget_ms,
+            }
+        )
+
+    def _bucket_seed(self, st: _BucketState) -> int:
+        """Deterministic per-bucket probe seed (stable across runs and
+        stream orderings, unlike an arrival counter)."""
+        return (self.seed * 2654435761 + zlib.crc32(st.key.encode())) % (2**31)
+
+    def _bucket_entry(self, st: _BucketState, d: Decision) -> Dict[str, Any]:
+        return {
+            "choice": d.choice,
+            "op": st.rep_feat.op,
+            "bucket": st.bucket.sig(),
+            "rep_graph_sig": st.rep_feat.graph_sig,
+            "probe_ms": d.probe_ms,
+            "estimates_ms": st.estimates_ms,
+        }
+
+    # ----------------------------------------------------- finalization
+    def finalize(self) -> Dict[str, Any]:
+        """Pin every bucket decision (probed or provisional-baseline)
+        into the cache and flush once; after this, replaying the same
+        stream under AUTOSAGE_REPLAY_ONLY=1 serves identical choices
+        without a single probe. Returns the stream stats. No-op writes
+        in replay mode (the cache is read-only there)."""
+        if not self.cache.replay_only:
+            with self.cache:
+                for st in self._buckets.values():
+                    if not self.cache.contains(st.key):
+                        self.cache.put(st.key, self._bucket_entry(st, st.current()))
+            self.cache.flush()
+        stats = self.stats()
+        telemetry.emit_batch_event({"event": "finalize", **stats})
+        return stats
+
+    def __enter__(self) -> "BatchScheduler":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.finalize()
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "decides": self._decides,
+            "buckets": len(self._buckets),
+            "probes_run": self._probe_passes,
+            "probes_avoided": self._decides - self._probe_passes,
+            "probe_spent_ms": round(self.probe_spent_ms, 3),
+            "probe_budget_ms": self.probe_budget_ms,
+            "decide_wall_ms": round(self._decide_wall_ms, 3),
+            "pending_buckets": len(self.pending()),
+        }
+
+    def bucket_stats(self) -> List[Dict[str, Any]]:
+        """Per-bucket telemetry rows, heaviest traffic first."""
+        rows = []
+        for st in sorted(self._buckets.values(), key=lambda s: -s.hits):
+            d = st.current()
+            rows.append(
+                {
+                    "bucket": st.bucket.sig(),
+                    "op": st.bucket.op,
+                    "f": st.bucket.f,
+                    "hits": st.hits,
+                    "probed": st.probed,
+                    "choice": d.choice,
+                    "est_gain_ms": round(st.est_gain_ms, 4),
+                    "probe_charge_ms": round(st.probe_charge_ms, 3),
+                    "rep_n_rows": st.rep_feat.n_rows,
+                    "rep_nnz": st.rep_feat.nnz,
+                }
+            )
+        return rows
+
+    def _record(self, st: _BucketState, d: Decision, source: str) -> None:
+        event = {
+            "i": self._decides - 1,
+            "bucket": st.bucket.sig(),
+            "key": st.key,
+            "op": d.op,
+            "f": st.bucket.f,
+            "choice": d.choice,
+            "source": source,
+        }
+        self.trace.append(event)
+        telemetry.emit_batch_event({"event": "decide", **event})
+
+    def write_trace(self, path: str) -> None:
+        """Dump the stream trace as JSONL (one decide per line); replaces
+        any existing file so repeated dumps never duplicate events."""
+        import json
+        from pathlib import Path
+
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        with open(p, "w") as f:
+            for event in self.trace:
+                json.dump(event, f, sort_keys=True)
+                f.write("\n")
+
+    # ----------------------------------------- AutoSage-compatible API
+    def build_runner(self, csr: CSR, decision: Decision) -> Callable:
+        return self.sage.build_runner(csr, decision)
+
+    def spmm(self, csr: CSR, b):
+        d = self.decide(csr, int(b.shape[1]), "spmm")
+        return self.build_runner(csr, d)(b), d
+
+    def sddmm(self, csr: CSR, x, y):
+        d = self.decide(csr, int(x.shape[1]), "sddmm")
+        return self.build_runner(csr, d)(x, y), d
+
+    def attention(self, csr: CSR, q, k, v):
+        d = self.decide(csr, int(q.shape[1]), "attention")
+        return self.build_runner(csr, d)(q, k, v), d

@@ -1,30 +1,83 @@
 """Persistent schedule cache with deterministic replay (paper §4.2, §10).
 
-Keyed by (device_sig, graph_sig, F, op, alpha) — the paper's
-"(device, graph signature, F, op)" plus the guardrail setting, since a
-different alpha can change the decision. JSON on disk, atomic writes.
-`replay_only` mode never probes: a cache miss raises, guaranteeing
-bit-identical schedule choices across runs (AUTOSAGE_REPLAY_ONLY=1).
+Two key kinds live side by side (schema v3):
+
+  exact   ``{device}|{graph_sig}|F={f}|{op}|a={alpha}`` — the paper's
+          "(device, graph signature, F, op)" plus the guardrail alpha,
+          since a different alpha can change the decision.
+  bucket  ``bucket|{device}|{bucket_sig}|F={f}|{op}|a={alpha}`` — one
+          decision shared by every graph that canonicalizes into the
+          same schedule bucket (core/batch.py); this is what lets a
+          stream of thousands of sampled subgraphs replay from a handful
+          of entries.
+
+JSON on disk, atomic writes. `replay_only` mode never probes: a cache
+miss raises, guaranteeing bit-identical schedule choices across runs
+(AUTOSAGE_REPLAY_ONLY=1).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import tempfile
 import threading
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 DEFAULT_PATH = os.environ.get("AUTOSAGE_CACHE", "autosage_cache.json")
 
 # entry schema: 1 = per-op decisions (choice/probe_ms/estimates_ms);
-# 2 adds joint pipeline decisions ("op": "attention", "stage_ms").
-# Reads stay tolerant of either shape, so old caches replay unchanged.
-SCHEMA_VERSION = 2
+# 2 adds joint pipeline decisions ("op": "attention", "stage_ms");
+# 3 adds bucket-level entries ("bucket": <bucket_sig>) written by the
+# batch scheduler. Reads stay tolerant of every shape, so old caches
+# replay unchanged.
+SCHEMA_VERSION = 3
+
+_BUCKET_PREFIX = "bucket"
 
 
 class ReplayMiss(RuntimeError):
     pass
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheKey:
+    """Structured form of a cache key; `format()`/`parse_key()` are the
+    only places that know the on-disk string layout."""
+
+    kind: str  # "exact" | "bucket"
+    device: str
+    sig: str  # graph_sig (exact) or bucket_sig (bucket)
+    f: int
+    op: str
+    alpha: float
+
+    def format(self) -> str:
+        body = f"{self.device}|{self.sig}|F={self.f}|{self.op}|a={self.alpha}"
+        return f"{_BUCKET_PREFIX}|{body}" if self.kind == "bucket" else body
+
+
+def parse_key(key: str) -> Optional[CacheKey]:
+    """Inverse of CacheKey.format(); None for keys this version does not
+    understand (foreign entries are carried along, never crashed on)."""
+    parts = key.split("|")
+    kind = "exact"
+    if parts and parts[0] == _BUCKET_PREFIX:
+        kind = "bucket"
+        parts = parts[1:]
+    if len(parts) != 5:
+        return None
+    device, sig, f_part, op, a_part = parts
+    if not f_part.startswith("F=") or not a_part.startswith("a="):
+        return None
+    try:
+        return CacheKey(
+            kind=kind, device=device, sig=sig, f=int(f_part[2:]), op=op,
+            alpha=float(a_part[2:]),
+        )
+    except ValueError:
+        return None
 
 
 class ScheduleCache:
@@ -37,15 +90,41 @@ class ScheduleCache:
         if replay_only is None:
             replay_only = os.environ.get("AUTOSAGE_REPLAY_ONLY") == "1"
         self.replay_only = replay_only
-        self._lock = threading.Lock()
+        self._lock = threading.RLock()
         self._data: Dict[str, Dict[str, Any]] = {}
+        self._dirty = False
+        self._defer_depth = 0
         if self.path and self.path.exists():
+            self._data = self._load_tolerant()
+
+    def _load_tolerant(self) -> Dict[str, Dict[str, Any]]:
+        """Load the cache file; a corrupt/truncated file is moved aside to
+        ``<path>.corrupt`` and the cache starts empty instead of taking the
+        process down (a crash mid-rename or a half-synced volume must not
+        brick every later run). Transient read failures (OSError) still
+        raise: a momentarily-unreadable but valid file must not be
+        discarded and later overwritten by an eager put()."""
+        try:
             with open(self.path) as f:
-                self._data = json.load(f)
+                data = json.load(f)
+            if not isinstance(data, dict):
+                raise ValueError(f"cache root is {type(data).__name__}, not object")
+            return data
+        except (ValueError, UnicodeDecodeError):  # JSONDecodeError is a ValueError
+            backup = Path(str(self.path) + ".corrupt")
+            try:
+                os.replace(self.path, backup)
+            except OSError:
+                pass
+            return {}
 
     @staticmethod
     def key(device_sig: str, graph_sig: str, f: int, op: str, alpha: float) -> str:
-        return f"{device_sig}|{graph_sig}|F={f}|{op}|a={alpha}"
+        return CacheKey("exact", device_sig, graph_sig, f, op, alpha).format()
+
+    @staticmethod
+    def bucket_key(device_sig: str, bucket_sig: str, f: int, op: str, alpha: float) -> str:
+        return CacheKey("bucket", device_sig, bucket_sig, f, op, alpha).format()
 
     def contains(self, key: str) -> bool:
         return key in self._data
@@ -63,13 +142,44 @@ class ScheduleCache:
             raise ReplayMiss("cannot write cache in replay-only mode")
         with self._lock:
             self._data[key] = {"schema": SCHEMA_VERSION, **entry}
-            self._flush()
+            self._dirty = True
+            if self._defer_depth == 0:
+                self._flush()
 
-    def keys_for_op(self, op: str):
-        """All cached keys for one op (keys embed ``|<op>|``)."""
-        return [k for k in self._data if f"|{op}|" in k]
+    def keys_for_op(self, op: str, kind: Optional[str] = None) -> List[str]:
+        """All cached keys for one op (optionally one key kind), via the
+        structured parse — no substring matching against sig fields."""
+        out = []
+        for k in self._data:
+            ck = parse_key(k)
+            if ck is not None and ck.op == op and (kind is None or ck.kind == kind):
+                out.append(k)
+        return out
+
+    # ---- deferred flushing -------------------------------------------
+    # A decision *stream* (batch scheduler, probe pump) performs many
+    # puts; rewriting the whole JSON per put is O(n^2) over the stream.
+    # Inside `with cache:` puts only mark the cache dirty; one atomic
+    # write happens on exit (or on an explicit flush()).
+    def __enter__(self) -> "ScheduleCache":
+        with self._lock:
+            self._defer_depth += 1
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        with self._lock:
+            self._defer_depth = max(0, self._defer_depth - 1)
+            if self._defer_depth == 0 and self._dirty:
+                self._flush()
+
+    def flush(self) -> None:
+        """Write now if dirty (atomic rename); safe to call any time."""
+        with self._lock:
+            if self._dirty:
+                self._flush()
 
     def _flush(self) -> None:
+        self._dirty = False
         if not self.path:
             return
         # atomic rename so a crash never corrupts the cache

@@ -1,9 +1,12 @@
 """Input feature extraction (paper §4.2: "#rows/nnz, degree quantiles, F,
-device caps"). These drive the estimate stage and the cache key.
+device caps"). These drive the estimate stage and the cache key, and —
+coarsened into `ScheduleBucket`s — the batch scheduler's shared decisions
+(core/batch.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 import jax
@@ -92,3 +95,68 @@ class InputFeatures:
         """Default hubT: degrees beyond p99 are 'hubs' (paper sweeps this;
         AUTOSAGE_HUB_T overrides)."""
         return int(max(self.deg_p99, 4 * max(self.avg_deg, 1.0)))
+
+
+# ---------------------------------------------------------------------
+# Schedule buckets: coarse feature canonicalization for batched decide.
+#
+# Minibatched GNN training serves thousands of induced subgraphs per
+# epoch that differ only in which rows got sampled; ParamSpMM and
+# "Heuristic Adaptability to Input Dynamics" both observe that the best
+# SpMM mapping is stable across coarse feature regimes. A bucket keeps
+# exactly the features that flip decisions — op, F, device, and
+# log/decade-binned shape statistics — so near-identical subgraphs share
+# one probed decision instead of each paying their own probe.
+
+def _log2_bin(x: float) -> int:
+    """floor(log2(x)) with x<=1 clamped to bin 0 — monotone in x."""
+    return int(math.floor(math.log2(x))) if x > 1.0 else 0
+
+
+def _log10_bin(x: float) -> int:
+    """floor(log10(x)) for densities in (0, 1]; 0 maps below every real
+    density — monotone in x."""
+    if x <= 0.0:
+        return -99
+    return max(-12, int(math.floor(math.log10(x))))
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleBucket:
+    """Canonical coarse regime of one (graph, F, op) on one device.
+
+    Hashable and order-free: equal buckets (and only equal buckets)
+    share a batch-scheduler decision and a bucket-level cache entry.
+    """
+
+    op: str
+    f: int
+    device: str
+    rows_bin: int  # floor(log2(n_rows))
+    nnz_bin: int  # floor(log2(nnz))
+    skew_bin: int  # floor(log2(skew)) — heavy-tail regime
+    density_bin: int  # floor(log10(density))
+    dup_edges: bool  # flips fused-attention applicability
+
+    @staticmethod
+    def from_features(feat: "InputFeatures", device: Optional[str] = None) -> "ScheduleBucket":
+        return ScheduleBucket(
+            op=feat.op,
+            f=feat.f,
+            device=device if device is not None else device_sig(),
+            rows_bin=_log2_bin(feat.n_rows),
+            nnz_bin=_log2_bin(feat.nnz),
+            skew_bin=_log2_bin(feat.skew),
+            density_bin=_log10_bin(feat.density),
+            dup_edges=feat.dup_edges,
+        )
+
+    def sig(self) -> str:
+        """Stable string form used inside bucket-level cache keys (the
+        key carries device/F/op/alpha as separate structured fields, so
+        the sig encodes only the binned shape regime)."""
+        dup = "dup" if self.dup_edges else "simple"
+        return (
+            f"r{self.rows_bin}.z{self.nnz_bin}.s{self.skew_bin}"
+            f".d{self.density_bin}.{dup}"
+        )

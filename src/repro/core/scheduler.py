@@ -39,7 +39,11 @@ def default_probe_args(op: str, f: int, seed: int = 0) -> Callable[[CSR], tuple]
     """Random dense operands of width f, shaped for ``op``, per subgraph."""
 
     def fn(sub: CSR) -> tuple:
-        rng = np.random.default_rng(seed)
+        # per-subgraph stream: the 1x and 2x slope-probe subgraphs share
+        # n_cols, so a single seed would hand both probes byte-identical
+        # operands and let the 2x probe read them out of a warm cache,
+        # biasing the slope low
+        rng = np.random.default_rng((seed, sub.n_rows, sub.nnz))
         if op == "spmm":
             return (rng.standard_normal((sub.n_cols, f)).astype(np.float32),)
         if op == "sddmm":
@@ -97,8 +101,12 @@ class AutoSage:
         self.probe_iters = probe_iters if probe_iters is not None else probe_mod.DEFAULT_ITERS
         self.probe_cap_ms = probe_cap_ms if probe_cap_ms is not None else probe_mod.DEFAULT_CAP_MS
         # built-runner memo: prepare() is O(nnz) host work + device upload,
-        # paid once per (graph, op, choice) instead of per forward call
+        # paid once per (graph, op, choice) instead of per forward call.
+        # LRU-bounded: a minibatch stream (core/batch.py) feeds thousands
+        # of one-shot subgraphs, each pinning O(nnz) device buffers —
+        # unbounded memoization is a memory leak there
         self._runners: Dict[tuple, Callable] = {}
+        self._runner_cap = int(os.environ.get("AUTOSAGE_RUNNER_CACHE", "64"))
 
     # ------------------------------------------------------------------
     def probe_candidates(
@@ -249,11 +257,13 @@ class AutoSage:
         from repro.sparse.csr import graph_signature
 
         key = (graph_signature(csr), decision.op, decision.choice)
-        runner = self._runners.get(key)
+        runner = self._runners.pop(key, None)
         if runner is None:
             aux = decision.variant.prepare(csr)
             runner = decision.variant.build(aux)
-            self._runners[key] = runner
+            while len(self._runners) >= max(self._runner_cap, 1):
+                self._runners.pop(next(iter(self._runners)))
+        self._runners[key] = runner  # (re)insert at MRU position
         return runner
 
     def spmm(self, csr: CSR, b, seed: int = 0):

@@ -45,6 +45,21 @@ def append_jsonl(path: str, record: Dict) -> None:
         f.write("\n")
 
 
+def emit_batch_event(event: Dict) -> Optional[str]:
+    """Batch-scheduler stream telemetry (per-decide events, bucket probes,
+    finalize summaries) as one JSONL stream per run.
+
+    No-op unless AUTOSAGE_TELEMETRY_DIR is set — the batched decide hot
+    path must not touch the filesystem by default. Returns the path
+    written."""
+    out = os.environ.get("AUTOSAGE_TELEMETRY_DIR")
+    if not out:
+        return None
+    path = str(Path(out) / "batch_stream.jsonl")
+    append_jsonl(path, event)
+    return path
+
+
 def emit_attention_decision(decision) -> Optional[str]:
     """Per-stage breakdown stream for pipeline decisions (§8.7 analysis).
 

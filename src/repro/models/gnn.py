@@ -7,17 +7,23 @@ GAT-style CSR attention:     H' = CSR_attention(A, HW_q, HW_k, HW_v)
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+from typing import Dict, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.batch import BatchScheduler
 from repro.core.scheduler import AutoSage
 from repro.kernels import ref
 from repro.models.modules import dense_init
 from repro.sparse.csr import CSR
+
+# Any scheduler exposing decide(csr, f, op) / build_runner(csr, decision):
+# the per-graph AutoSage, or the BatchScheduler that amortizes probing
+# across a stream of sampled subgraphs (minibatch training).
+SchedulerLike = Union[AutoSage, BatchScheduler]
 
 
 def init_gnn(cfg: ArchConfig, key, in_dim: int, n_classes: int, dtype=jnp.float32) -> Dict:
@@ -41,10 +47,10 @@ def sage_forward(
     params: Dict,
     csr: CSR,
     x: jax.Array,
-    sage: Optional[AutoSage] = None,
+    sage: Optional[SchedulerLike] = None,
 ) -> jax.Array:
     """GraphSAGE forward; aggregation runs through the AutoSAGE scheduler
-    when one is supplied, else the XLA baseline."""
+    (per-graph or batched) when one is supplied, else the XLA baseline."""
     a = _norm_csr(csr)
     rowptr, colind = jnp.asarray(a.rowptr), jnp.asarray(a.colind)
     val = jnp.asarray(a.val)
@@ -65,6 +71,42 @@ def sage_forward(
     return x
 
 
+def sage_minibatch_forward(
+    params: Dict,
+    sub: CSR,
+    batch_rows: np.ndarray,
+    x_full: jax.Array,
+    sage: Optional[SchedulerLike] = None,
+) -> jax.Array:
+    """One minibatch step of 1-hop sampled GraphSAGE.
+
+    ``sub`` is a *rectangular* induced adjacency (batch_rows x all
+    nodes), e.g. one element of `sparse.sample_subgraph_stream`: each
+    sampled row aggregates over its full neighborhood in the parent
+    graph. Layer 0 is the scheduled sparse aggregation; the remaining
+    layers act on the batch rows only (dense head), which is the
+    standard shape of sampled-neighborhood training. With a
+    `BatchScheduler` supplied, thousands of per-step subgraphs share
+    bucketed schedule decisions instead of each paying a probe.
+    """
+    a = _norm_csr(sub)
+    h = x_full @ params["w_agg"][0]
+    if sage is not None:
+        d = sage.decide(a, int(h.shape[1]), "spmm")
+        agg = sage.build_runner(a, d)(h)
+    else:
+        agg = ref.spmm_ref(
+            jnp.asarray(a.rowptr), jnp.asarray(a.colind), jnp.asarray(a.val), h
+        )
+    xb = x_full[jnp.asarray(np.asarray(batch_rows))]
+    out = agg.astype(xb.dtype) + xb @ params["w_self"][0]
+    n_layers = len(params["w_agg"])
+    for i in range(1, n_layers):
+        out = jax.nn.relu(out)
+        out = out @ params["w_agg"][i] + out @ params["w_self"][i]
+    return out
+
+
 def init_gat(cfg: ArchConfig, key, in_dim: int, dtype=jnp.float32) -> Dict:
     d = cfg.d_model
     ks = jax.random.split(key, 3)
@@ -76,7 +118,7 @@ def init_gat(cfg: ArchConfig, key, in_dim: int, dtype=jnp.float32) -> Dict:
 
 
 def gat_layer(
-    params: Dict, csr: CSR, x: jax.Array, sage: Optional[AutoSage] = None
+    params: Dict, csr: CSR, x: jax.Array, sage: Optional[SchedulerLike] = None
 ) -> jax.Array:
     """Dot-product graph attention = the paper's CSR-attention pipeline.
 

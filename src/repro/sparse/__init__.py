@@ -3,9 +3,11 @@ from repro.sparse.csr import CSR, csr_from_coo, csr_from_dense, graph_signature
 from repro.sparse.bsr import BlockELL, csr_to_block_ell
 from repro.sparse.generators import (
     erdos_renyi,
+    fixed_degree,
     hub_skew,
     reddit_like,
     products_like,
+    sample_subgraph_stream,
     sliding_window_csr,
 )
 
@@ -17,8 +19,10 @@ __all__ = [
     "BlockELL",
     "csr_to_block_ell",
     "erdos_renyi",
+    "fixed_degree",
     "hub_skew",
     "reddit_like",
     "products_like",
+    "sample_subgraph_stream",
     "sliding_window_csr",
 ]

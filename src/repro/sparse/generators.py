@@ -7,6 +7,8 @@ generators are vectorized numpy (single-core container).
 """
 from __future__ import annotations
 
+from typing import List, Optional, Sequence
+
 import numpy as np
 
 from repro.sparse.csr import CSR, csr_from_coo
@@ -97,6 +99,44 @@ def products_like(scale: float = 0.01, seed: int = 0) -> CSR:
     raw = rng.lognormal(mean=0.0, sigma=1.1, size=n)
     deg = np.maximum(1, (raw / raw.mean() * 50.5)).astype(np.int64)
     return _csr_from_degrees(deg, n, rng)
+
+
+def fixed_degree(n: int, deg: int, n_cols: Optional[int] = None, seed: int = 0) -> CSR:
+    """Uniform-degree graph: every row has exactly ``deg`` neighbors.
+
+    The cleanest single-regime generator for the batch scheduler's
+    bucket tests/benchmarks: nnz is exact (n*deg), so sampled subgraphs
+    of a fixed row count land deterministically in one schedule bucket.
+    """
+    rng = np.random.default_rng(seed)
+    return _csr_from_degrees(
+        np.full(n, deg, dtype=np.int64), n_cols if n_cols is not None else n, rng
+    )
+
+
+def sample_subgraph_stream(
+    parents: Sequence[CSR],
+    n_graphs: int,
+    rows_per_graph: int,
+    seed: int = 0,
+) -> List[CSR]:
+    """Minibatch-style stream of induced subgraphs, cycling over parents.
+
+    Each subgraph is a uniform random row subset carrying its full
+    adjacency (same shape as GNN minibatch aggregation: batch rows
+    aggregate over all their neighbors), mirroring `CSR.row_slice` /
+    the probe sampler. Subgraphs drawn from one parent differ in which
+    rows were sampled but share the parent's degree regime — exactly the
+    workload `BatchScheduler` buckets.
+    """
+    rng = np.random.default_rng(seed)
+    out: List[CSR] = []
+    for i in range(n_graphs):
+        parent = parents[i % len(parents)]
+        n = min(rows_per_graph, parent.n_rows)
+        rows = np.sort(rng.choice(parent.n_rows, size=n, replace=False))
+        out.append(parent.row_slice(rows))
+    return out
 
 
 def sliding_window_csr(

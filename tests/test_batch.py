@@ -1,0 +1,342 @@
+"""Batched multi-graph scheduling: bucket canonicalization, shared probe
+budget, provisional-baseline upgrade, stream replay, and the cache
+plumbing underneath it (deferred flush, corruption recovery, structured
+keys)."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AutoSage,
+    BatchScheduler,
+    InputFeatures,
+    ReplayMiss,
+    ScheduleBucket,
+    ScheduleCache,
+    parse_key,
+)
+from repro.core.cache import CacheKey
+from repro.core.scheduler import default_probe_args
+from repro.kernels import ref
+from repro.models.gnn import init_gnn, sage_minibatch_forward
+from repro.sparse import fixed_degree, hub_skew, sample_subgraph_stream
+from repro.sparse.csr import CSR
+
+
+def _feat(n_rows=1024, nnz=4096, f=32, op="spmm", skew=1.0, density=1e-3,
+          dup=False):
+    avg = nnz / n_rows
+    return InputFeatures(
+        n_rows=n_rows, n_cols=n_rows, nnz=nnz, avg_deg=avg, deg_p50=avg,
+        deg_p90=avg, deg_p99=avg * skew, deg_max=avg * skew, skew=skew,
+        density=density, f=f, op=op, graph_sig="t", f_mod_4=(f % 4 == 0),
+        dup_edges=dup,
+    )
+
+
+def _tiny_sage(path=None, **kw):
+    return AutoSage(
+        cache=ScheduleCache(path=path), probe_iters=1, probe_cap_ms=25,
+        probe_frac=0.25, **kw,
+    )
+
+
+# ------------------------------------------------------- canonicalization
+def test_bucket_deterministic_across_samples():
+    """Subgraphs sampled from one regime canonicalize into one bucket,
+    and re-bucketing the same graph is bit-stable."""
+    parent = fixed_degree(4096, 6, seed=0)
+    subs = sample_subgraph_stream([parent], 8, rows_per_graph=512, seed=1)
+    buckets = {
+        ScheduleBucket.from_features(
+            InputFeatures.from_csr(g, 32, "spmm"), device="dev"
+        )
+        for g in subs
+    }
+    assert len(buckets) == 1
+    b = buckets.pop()
+    again = ScheduleBucket.from_features(
+        InputFeatures.from_csr(subs[0], 32, "spmm"), device="dev"
+    )
+    assert again == b and again.sig() == b.sig()
+
+
+def test_bucket_monotone_binning():
+    """Bins are monotone nondecreasing in the underlying feature."""
+    rows_bins = [
+        ScheduleBucket.from_features(_feat(n_rows=n), device="d").rows_bin
+        for n in (1, 7, 64, 65, 1000, 4096, 10**6)
+    ]
+    assert rows_bins == sorted(rows_bins)
+    nnz_bins = [
+        ScheduleBucket.from_features(_feat(nnz=z), device="d").nnz_bin
+        for z in (1, 100, 4096, 5000, 10**7)
+    ]
+    assert nnz_bins == sorted(nnz_bins)
+    dens_bins = [
+        ScheduleBucket.from_features(_feat(density=x), device="d").density_bin
+        for x in (1e-9, 1e-6, 3e-4, 0.02, 0.5)
+    ]
+    assert dens_bins == sorted(dens_bins)
+    skew_bins = [
+        ScheduleBucket.from_features(_feat(skew=s), device="d").skew_bin
+        for s in (0.5, 1.0, 2.5, 9.0, 200.0)
+    ]
+    assert skew_bins == sorted(skew_bins)
+
+
+def test_bucket_distinct_f_op_device_never_share():
+    base = ScheduleBucket.from_features(_feat(f=32, op="spmm"), device="dev_a")
+    assert base != ScheduleBucket.from_features(_feat(f=64, op="spmm"), device="dev_a")
+    assert base != ScheduleBucket.from_features(_feat(f=32, op="sddmm"), device="dev_a")
+    assert base != ScheduleBucket.from_features(_feat(f=32, op="spmm"), device="dev_b")
+    # ... and their cache keys differ too (F/op/device are key fields)
+    def key(b):
+        return ScheduleCache.bucket_key(b.device, b.sig(), b.f, b.op, 0.95)
+    others = [
+        ScheduleBucket.from_features(_feat(f=64), device="dev_a"),
+        ScheduleBucket.from_features(_feat(op="sddmm"), device="dev_a"),
+        ScheduleBucket.from_features(_feat(), device="dev_b"),
+    ]
+    assert all(key(o) != key(base) for o in others)
+
+
+# ------------------------------------------------------- budgeted streams
+@pytest.fixture(scope="module")
+def regime_stream():
+    parents = [
+        fixed_degree(2048, 3, seed=0),
+        fixed_degree(2048, 12, seed=1),
+        fixed_degree(2048, 48, seed=2),
+        hub_skew(2048, 6, 0.10, 60, seed=3),
+    ]
+    return sample_subgraph_stream(parents, 64, rows_per_graph=256, seed=4)
+
+
+def test_stream_probes_once_per_bucket(regime_stream):
+    """>= 64 sampled subgraphs from <= 8 regimes cost <= 8 probe passes;
+    every decide still returns an oracle-correct runnable decision."""
+    bs = BatchScheduler(_tiny_sage(), probe_budget_ms=10_000)
+    for g in regime_stream:
+        bs.decide(g, 16, "spmm")
+    stats = bs.stats()
+    assert stats["decides"] == 64
+    assert stats["buckets"] <= 8
+    assert stats["probes_run"] <= 8
+    assert stats["probes_run"] <= stats["buckets"]
+    assert stats["probes_avoided"] >= 64 - 8
+    # spot-check correctness through the batched path
+    g = regime_stream[-1]
+    b = jnp.asarray(
+        np.random.default_rng(0).standard_normal((g.n_cols, 16)).astype(np.float32)
+    )
+    out, d = bs.spmm(g, b)
+    exp = ref.spmm_ref(jnp.asarray(g.rowptr), jnp.asarray(g.colind), None, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-3, atol=2e-3)
+
+
+def test_zero_budget_serves_guardrail_safe_baseline(regime_stream):
+    """With no probe budget, every bucket stays provisional: the vendor
+    baseline (exactly the guardrail fallback), never a crash."""
+    bs = BatchScheduler(_tiny_sage(), probe_budget_ms=0.0)
+    choices = {bs.decide(g, 16, "spmm").choice for g in regime_stream[:8]}
+    assert choices == {"baseline"}
+    assert bs.stats()["probes_run"] == 0
+    assert len(bs.pending()) > 0  # buckets wait for budget, not dropped
+
+
+def test_budget_prioritizes_traffic_weighted_gain():
+    """With auto-pump off, pump() spends budget on the pending bucket
+    with the largest hits x estimated-gain first."""
+    parents = [fixed_degree(2048, 3, seed=0), fixed_degree(2048, 48, seed=1)]
+    bs = BatchScheduler(_tiny_sage(), probe_budget_ms=10_000, auto_pump=False)
+    light, heavy = sample_subgraph_stream(parents, 2, rows_per_graph=256, seed=2)
+    bs.decide(light, 16, "spmm")
+    for _ in range(5):  # heavy regime gets 5x the traffic
+        bs.decide(heavy, 16, "spmm")
+    pend = bs.pending()
+    assert len(pend) == 2
+    best = max(pend, key=type(pend[0]).priority)
+    assert bs.pump(1) == 1
+    assert best.probed and best.decision is not None
+
+
+def test_decision_upgrades_in_place(regime_stream):
+    """A bucket served provisionally upgrades to its probed choice once
+    pump() reaches it — later decides see the upgrade."""
+    bs = BatchScheduler(_tiny_sage(), probe_budget_ms=0.0)
+    g = regime_stream[2]  # deg-48 regime: challengers beat baseline
+    d0 = bs.decide(g, 16, "spmm")
+    assert d0.choice == "baseline" and bs.pending()
+    bs.probe_budget_ms = 10_000.0  # budget arrives
+    assert bs.pump() >= 1
+    d1 = bs.decide(g, 16, "spmm")
+    assert bs.stats()["pending_buckets"] == 0
+    assert d1.probe_ms  # probed decision, not the provisional one
+    sources = [e["source"] for e in bs.trace]
+    assert sources[0] == "provisional" and sources[-1] == "probe"
+
+
+def test_stream_replay_bit_identical(tmp_path, regime_stream):
+    path = str(tmp_path / "cache.json")
+    with BatchScheduler(_tiny_sage(path=path), probe_budget_ms=10_000) as bs:
+        for g in regime_stream:
+            bs.decide(g, 16, "spmm")
+    finals = {r["bucket"]: r["choice"] for r in bs.bucket_stats()}
+
+    def replay_choices():
+        rbs = BatchScheduler(
+            AutoSage(cache=ScheduleCache(path=path, replay_only=True))
+        )
+        out = [rbs.decide(g, 16, "spmm").choice for g in regime_stream]
+        assert rbs.stats()["probes_run"] == 0
+        return out, rbs
+
+    c1, rbs = replay_choices()
+    c2, _ = replay_choices()
+    assert c1 == c2  # deterministic across replays
+    for ev, choice in zip(rbs.trace, c1):  # and pinned to the finalized choices
+        assert choice == finals[ev["bucket"]]
+    with pytest.raises(ReplayMiss):
+        rbs.decide(hub_skew(3000, 4, 0.05, 300, seed=9), 16, "spmm")
+
+
+def test_finalize_pins_unprobed_buckets(tmp_path, regime_stream):
+    """Zero-budget streams still replay: finalize pins the provisional
+    baseline decisions as bucket entries."""
+    path = str(tmp_path / "cache.json")
+    with BatchScheduler(_tiny_sage(path=path), probe_budget_ms=0.0) as bs:
+        for g in regime_stream[:8]:
+            bs.decide(g, 16, "spmm")
+    rbs = BatchScheduler(AutoSage(cache=ScheduleCache(path=path, replay_only=True)))
+    assert all(
+        rbs.decide(g, 16, "spmm").choice == "baseline" for g in regime_stream[:8]
+    )
+
+
+def test_minibatch_forward_matches_reference(regime_stream):
+    """models/gnn.py minibatch path through the BatchScheduler equals the
+    unscheduled reference forward."""
+    from repro.configs.base import get_config
+    import jax
+
+    cfg = get_config("gnn_sage")
+    sub = regime_stream[0]
+    rows = np.arange(sub.n_rows)
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((sub.n_cols, 24)).astype(np.float32)
+    )
+    params = init_gnn(cfg, jax.random.PRNGKey(0), 24, 8)
+    bs = BatchScheduler(_tiny_sage(), probe_budget_ms=10_000)
+    got = sage_minibatch_forward(params, sub, rows, x, sage=bs)
+    exp = sage_minibatch_forward(params, sub, rows, x, sage=None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------------- cache: v3
+def test_cache_deferred_flush(tmp_path):
+    path = tmp_path / "cache.json"
+    c = ScheduleCache(path=str(path))
+    with c:
+        c.put("k1", {"choice": "baseline"})
+        c.put("k2", {"choice": "row_ell"})
+        assert not path.exists()  # deferred: no write amplification
+    assert path.exists()  # one atomic write on exit
+    assert set(json.load(open(path))) == {"k1", "k2"}
+    # eager outside the context (back-compat with per-graph decide)
+    c.put("k3", {"choice": "dense"})
+    assert "k3" in json.load(open(path))
+    # explicit flush is idempotent
+    c.flush()
+    assert set(json.load(open(path))) == {"k1", "k2", "k3"}
+
+
+def test_cache_corrupt_file_recovers(tmp_path):
+    path = tmp_path / "cache.json"
+    path.write_text('{"truncated": ')
+    c = ScheduleCache(path=str(path))
+    assert len(c) == 0
+    backup = tmp_path / "cache.json.corrupt"
+    assert backup.exists() and backup.read_text() == '{"truncated": '
+    c.put("k", {"choice": "baseline"})  # cache is usable again
+    assert "k" in json.load(open(path))
+    # non-dict JSON roots are corrupt too
+    path2 = tmp_path / "list.json"
+    path2.write_text("[1, 2]")
+    assert len(ScheduleCache(path=str(path2))) == 0
+    assert (tmp_path / "list.json.corrupt").exists()
+
+
+def test_cache_key_parse_format_roundtrip():
+    exact = CacheKey("exact", "cpu:x:jax1", "deadbeef", 64, "spmm", 0.95)
+    bucket = CacheKey("bucket", "cpu:x:jax1", "r9.z12.s0.d-3.simple", 64,
+                      "attention", 0.98)
+    for ck in (exact, bucket):
+        assert parse_key(ck.format()) == ck
+    assert ScheduleCache.key("d", "sig", 32, "spmm", 0.95) == \
+        CacheKey("exact", "d", "sig", 32, "spmm", 0.95).format()
+    assert parse_key("not|a|key") is None
+    assert parse_key("d|sig|F=x|spmm|a=0.95") is None
+
+
+def test_keys_for_op_structured(tmp_path):
+    """keys_for_op must not substring-match op names inside sig fields."""
+    c = ScheduleCache(path=None)
+    c.put(ScheduleCache.key("dev", "g1", 32, "spmm", 0.95), {"choice": "a"})
+    c.put(ScheduleCache.key("dev", "x|spmm|y".replace("|", "_"), 32, "sddmm", 0.95),
+          {"choice": "b"})
+    c.put(ScheduleCache.bucket_key("dev", "r1.z2.s0.d-3.simple", 32, "spmm", 0.95),
+          {"choice": "c"})
+    c._data["junk-key-from-the-future"] = {"choice": "d"}  # tolerated, skipped
+    spmm_keys = c.keys_for_op("spmm")
+    assert len(spmm_keys) == 2
+    assert len(c.keys_for_op("spmm", kind="bucket")) == 1
+    assert len(c.keys_for_op("spmm", kind="exact")) == 1
+    assert len(c.keys_for_op("sddmm")) == 1
+
+
+def test_runner_memo_bounded_for_streams(regime_stream):
+    """The prepared-runner memo must not grow with stream length: one-shot
+    sampled subgraphs would otherwise pin O(nnz) device buffers forever."""
+    sage = _tiny_sage()
+    sage._runner_cap = 4
+    bs = BatchScheduler(sage, probe_budget_ms=0.0)  # baseline-only: cheap
+    b = jnp.asarray(
+        np.random.default_rng(0).standard_normal(
+            (regime_stream[0].n_cols, 16)
+        ).astype(np.float32)
+    )
+    for g in regime_stream[:10]:
+        bs.spmm(g, b)
+    assert len(sage._runners) <= 4
+    # most-recent graph is still memoized (LRU, not clear-on-insert)
+    g = regime_stream[9]
+    d = bs.decide(g, 16, "spmm")
+    r1 = bs.build_runner(g, d)
+    assert bs.build_runner(g, d) is r1
+
+
+# ------------------------------------------------- probe operand streams
+def test_probe_args_distinct_per_subgraph():
+    """The 1x and 2x slope-probe subgraphs must not receive identical
+    random operands (warm-cache bias on the second probe)."""
+    parent = fixed_degree(4096, 6, seed=0)
+    sub1 = parent.row_slice(np.arange(256))
+    sub2 = parent.row_slice(np.arange(512))
+    fn = default_probe_args("spmm", 8, seed=0)
+    (b1,), (b2,) = fn(sub1), fn(sub2)
+    assert b1.shape == b2.shape  # same n_cols: shapes alone don't save us
+    assert not np.allclose(b1, b2)
+    # ... while the stream stays deterministic per subgraph
+    np.testing.assert_array_equal(fn(sub1)[0], b1)
+
+
+def test_probe_args_sddmm_attention_shapes():
+    csr = CSR(np.array([0, 1, 2], np.int32), np.array([0, 1], np.int32),
+              None, 2, 3)
+    x, y = default_probe_args("sddmm", 4)(csr)
+    assert x.shape == (2, 4) and y.shape == (3, 4)
+    q, k, v = default_probe_args("attention", 4)(csr)
+    assert q.shape == (2, 4) and k.shape == v.shape == (3, 4)
