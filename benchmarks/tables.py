@@ -16,7 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AutoSage, BatchScheduler, ReplayMiss, ScheduleCache
+from repro.core import estimate as est_mod
 from repro.core.features import InputFeatures, HardwareSpec
+from repro.core.guardrail import apply_guardrail
 from repro.core.probe import time_callable
 from repro.core.telemetry import append_jsonl, write_csv
 from repro.core import registry
@@ -25,6 +27,7 @@ from repro.sparse import (
     erdos_renyi,
     fixed_degree,
     hub_skew,
+    power_law,
     products_like,
     reddit_like,
     sample_subgraph_stream,
@@ -423,6 +426,127 @@ def batch_smoke(full: bool = False) -> List[Tuple]:
     return rows
 
 
+def _skew_variants(feat, interpret=True):
+    """One dense-W, one ragged, and the hub-ragged Pallas SpMM variant at
+    the canonical rb=bc=8, f_tile=128 knobs (kernel-level comparison)."""
+    picks = {}
+    for v in registry._pallas_spmm_variants(feat, interpret=interpret):
+        if v.knobs.get("rb") == 8 and v.knobs.get("bc") == 8 \
+                and v.knobs.get("f_tile") == 128:
+            picks[v.name] = v
+    return picks
+
+
+def skew_stress(full: bool = False) -> List[Tuple]:
+    """Ragged vs dense-W kernel-level speedup curve over power-law skew
+    alpha (the paper's skew stress, Fig-style): same block-ELL data, one
+    kernel grids over n_row_blocks x W, the other over actual slots.
+    Outputs are checked value-identical (same tiles, same accumulation
+    order), so the speedup is pure padding-work elimination. The
+    `est_ragged_wins` column confirms the roofline alone would already
+    rank ragged first at that skew — no probe needed."""
+    n = 2048 if full else 768
+    f = 64
+    alphas = (0.0, 0.4, 0.8, 1.2, 1.6, 2.0) if full else (0.0, 0.8, 1.6)
+    rng = np.random.default_rng(0)
+    rows: List[Tuple] = []
+    for alpha in alphas:
+        csr = power_law(n, alpha, avg_deg=4, seed=int(alpha * 10))
+        feat = InputFeatures.from_csr(csr, f, "spmm")
+        picks = _skew_variants(feat)
+        b = jnp.asarray(rng.standard_normal((csr.n_cols, f)).astype(np.float32))
+
+        base_v = registry.baseline(feat, HardwareSpec.cpu())
+        t_base = _measure_full(lambda r=base_v.build(base_v.prepare(csr)): r(b),
+                               iters=3)
+        runs, outs = {}, {}
+        for name, v in picks.items():
+            runner = v.build(v.prepare(csr))
+            outs[name] = np.asarray(runner(b))
+            runs[name] = _measure_full(lambda r=runner: r(b), iters=3)
+        # identical tiles accumulated in identical order: value-identical
+        assert np.array_equal(outs["block_ell_pallas"], outs["ragged_ell_pallas"])
+        hw = HardwareSpec.tpu_v5e()
+        est_d = est_mod.estimate(feat, hw, "block_ell_pallas",
+                                 picks["block_ell_pallas"].knobs)
+        est_r = est_mod.estimate(feat, hw, "ragged_ell_pallas",
+                                 picks["ragged_ell_pallas"].knobs)
+        sp = runs["block_ell_pallas"] / max(runs["ragged_ell_pallas"], 1e-9)
+        rows.append((
+            alpha, round(feat.padding_waste, 3), round(t_base, 3),
+            round(runs["block_ell_pallas"], 3),
+            round(runs["ragged_ell_pallas"], 3),
+            round(runs.get("hub_ragged_pallas", float("nan")), 3),
+            round(sp, 3), "yes" if est_r < est_d else "no",
+        ))
+        print(f"  [skew] alpha={alpha:.1f} waste={feat.padding_waste:.3f} "
+              f"base={t_base:8.3f}ms denseW={runs['block_ell_pallas']:8.3f}ms "
+              f"ragged={runs['ragged_ell_pallas']:8.3f}ms "
+              f"speedup={sp:.3f} est_ragged_wins={est_r < est_d}")
+    write_csv(
+        f"{OUT}/skew_stress.csv",
+        ["alpha", "padding_waste", "baseline_ms", "dense_w_ms", "ragged_ms",
+         "hub_ragged_ms", "ragged_vs_dense_speedup", "est_ragged_wins"],
+        rows,
+    )
+    return rows
+
+
+def skew_smoke(full: bool = False) -> List[Tuple]:
+    """Seconds-fast skew check for CI: at high power-law skew
+    (padding_waste >= 0.75) the decide machinery must pick a ragged
+    variant over dense-W within the Pallas family — by probe+guardrail
+    AND by estimate alone — with value-identical outputs; at zero skew
+    the two must tie (no padding to eliminate)."""
+    del full
+    f = 64
+    rng = np.random.default_rng(0)
+    rows: List[Tuple] = []
+    sage = _fresh_sage(probe_iters=2, probe_cap_ms=200)
+    for label, alpha in (("uniform", 0.0), ("skewed", 1.8)):
+        csr = power_law(512, alpha, avg_deg=4, seed=7)
+        feat = InputFeatures.from_csr(csr, f, "spmm")
+        picks = _skew_variants(feat)
+        dense_v, ragged_v = picks["block_ell_pallas"], picks["ragged_ell_pallas"]
+        b = jnp.asarray(rng.standard_normal((csr.n_cols, f)).astype(np.float32))
+        out_d = np.asarray(dense_v.build(dense_v.prepare(csr))(b))
+        out_r = np.asarray(ragged_v.build(ragged_v.prepare(csr))(b))
+        assert np.array_equal(out_d, out_r), "ragged must be value-identical"
+        exp = ref.spmm_ref(jnp.asarray(csr.rowptr), jnp.asarray(csr.colind),
+                           None, b)
+        np.testing.assert_allclose(out_r, np.asarray(exp), rtol=2e-3, atol=2e-3)
+
+        hw = HardwareSpec.tpu_v5e()
+        est_d = est_mod.estimate(feat, hw, dense_v.name, dense_v.knobs)
+        est_r = est_mod.estimate(feat, hw, ragged_v.name, ragged_v.knobs)
+        choice = "-"
+        if alpha > 0:
+            assert feat.padding_waste >= 0.75, feat.padding_waste
+            # the estimate alone must rank ragged first (no probing)
+            assert est_r < est_d, (est_r, est_d)
+            # ...and the probe+guardrail decide machinery must agree,
+            # measured within the Pallas family (dense-W as the family
+            # baseline; on CPU both run in interpret mode)
+            outcome = sage.probe_candidates(
+                csr, dense_v, [ragged_v],
+                lambda sub: (jnp.asarray(rng.standard_normal(
+                    (sub.n_cols, f)).astype(np.float32)),),
+            )
+            gr = apply_guardrail(outcome.best_name, outcome.t_best_ms,
+                                 outcome.t_baseline_ms, sage.alpha)
+            assert gr.accepted and gr.choice.startswith("ragged_ell_pallas"), gr
+            choice = gr.choice
+        rows.append((label, alpha, round(feat.padding_waste, 3),
+                     "yes" if est_r < est_d else "no", choice))
+        print(f"  [skew-smoke] {label:8s} alpha={alpha} "
+              f"waste={feat.padding_waste:.3f} est_ragged_wins={est_r < est_d} "
+              f"decide={choice}")
+    write_csv(f"{OUT}/skew_smoke.csv",
+              ["regime", "alpha", "padding_waste", "est_ragged_wins",
+               "decide_choice"], rows)
+    return rows
+
+
 def smoke(full: bool = False) -> List[Tuple]:
     """Seconds-fast bit-rot check for CI (--smoke): one scheduled SpMM and
     one pipeline-level attention decision on tiny graphs, results checked
@@ -470,10 +594,12 @@ ALL_TABLES = {
     "probe_overhead": probe_overhead,
     "csr_attention": csr_attention_pipeline,
     "batch_stream": batch_stream,
+    "skew_stress": skew_stress,
 }
 
 # run only via --smoke (CI) or --only <name>; not part of the default sweep
 SMOKE_TABLES = {
     "smoke": smoke,
     "batch_smoke": batch_smoke,
+    "skew_smoke": skew_smoke,
 }

@@ -19,6 +19,41 @@ def _roofline(bytes_moved: float, flops: float, hw: HardwareSpec) -> float:
     return max(bytes_moved / hw.hbm_bw, flops / hw.peak_flops)
 
 
+def _block_ell_elems(feat: InputFeatures, knobs: Dict, ragged: bool) -> float:
+    """Estimated padded *elements* a block-ELL kernel touches:
+    n_row_blocks x W x rb x bc for dense-W, the actual slot mass for
+    ragged. This asymmetry — dense-W pays max(nslots) everywhere, ragged
+    pays sum(nslots) — is the whole point of the slot-compacted family,
+    and exposing it here lets decide rank ragged above dense-W on skewed
+    inputs without spending a probe.
+
+    The element mass is modeled at the canonical rb=bc=8 blocking and
+    treated as blocking-invariant (re-tiling repartitions roughly the
+    same padded mass); the knob-dependent quantity is the *step count*,
+    which scales inversely with tile size — see _block_ell_steps. This
+    keeps non-canonical (rb, bc) variants comparable instead of charging
+    them rb*bc/64 times the canonical mass.
+
+    Falls back to the legacy nnz-multiplier model when the features were
+    hand-built without degree data (ell_width_est == 0).
+    """
+    if feat.ell_width_est > 0:
+        tiles8 = feat.ragged_tiles_est() if ragged else feat.dense_tiles_est()
+        elems = tiles8 * 64.0
+    else:
+        waste = knobs.get("padding_waste", 8.0)  # legacy: padded elems / nnz
+        elems = feat.nnz * waste
+        if ragged:
+            elems /= 4.0  # unknown structure: assume moderate compaction
+    return max(elems, 64.0)
+
+
+def _block_ell_steps(elems: float, knobs: Dict) -> float:
+    """Grid steps = padded elements / tile size: a (16, 8) tile halves
+    the step count of an (8, 8) tile over the same element mass."""
+    return elems / (knobs.get("rb", 8) * knobs.get("bc", 8))
+
+
 def estimate_spmm(feat: InputFeatures, hw: HardwareSpec, variant: str,
                   knobs: Dict) -> float:
     n, f, nnz = feat.n_rows, feat.f, feat.nnz
@@ -43,17 +78,21 @@ def estimate_spmm(feat: InputFeatures, hw: HardwareSpec, variant: str,
         padded = light_pad + hub_pad
         bytes_moved = padded * (f * BYTES_F32 + 8) + out_bytes * 1.2
         flops = 2.0 * padded * f
-    elif variant == "block_ell_pallas":
-        waste = knobs.get("padding_waste", 8.0)  # measured after prepare
-        eff = nnz * waste
-        bytes_moved = eff * (f * BYTES_F32 / knobs.get("bc", 8) + BYTES_F32) + out_bytes
+    elif variant in ("block_ell_pallas", "ragged_ell_pallas", "hub_ragged_pallas"):
+        ragged = variant != "block_ell_pallas"
+        bc = knobs.get("bc", 8)
+        f_tile = knobs.get("f_tile", 128)
+        eff = _block_ell_elems(feat, knobs, ragged)
+        bytes_moved = eff * (f * BYTES_F32 / bc + BYTES_F32) + out_bytes
+        if variant == "hub_ragged_pallas":
+            # two partitions: extra output scatter + per-partition launch
+            bytes_moved += out_bytes * 0.4
         flops = 2.0 * eff * f
         # per-grid-step overhead (pipeline bubbles, index prefetch):
-        # wider f_tile halves the step count — the "vec4" advantage
-        f_tile = knobs.get("f_tile", 128)
-        rb = knobs.get("rb", 8)
-        bc = knobs.get("bc", 8)
-        n_steps = (n / rb) * max(eff / max(n, 1) / bc, 1.0) * max(f / f_tile, 1.0)
+        # wider f_tile halves the step count — the "vec4" advantage.
+        # Ragged variants run fewer steps by construction: eff tracks
+        # sum(nslots) instead of n_row_blocks x max(nslots).
+        n_steps = _block_ell_steps(eff, knobs) * max(f / f_tile, 1.0)
         return _roofline(bytes_moved, flops, hw) + n_steps * 2e-7
     else:
         raise KeyError(variant)
@@ -73,11 +112,18 @@ def estimate_sddmm(feat: InputFeatures, hw: HardwareSpec, variant: str,
     elif variant == "dense":
         bytes_moved = (n * f + feat.n_cols * f + n * feat.n_cols) * BYTES_F32
         flops = 2.0 * n * feat.n_cols * f
-    elif variant == "block_ell_pallas":
-        waste = knobs.get("padding_waste", 8.0)
-        eff = nnz * waste
-        bytes_moved = eff * (f * BYTES_F32 / knobs.get("bc", 8) + BYTES_F32)
+    elif variant in ("block_ell_pallas", "ragged_ell_pallas"):
+        ragged = variant == "ragged_ell_pallas"
+        bc = knobs.get("bc", 8)
+        f_chunk = knobs.get("f_chunk", 128)
+        eff = _block_ell_elems(feat, knobs, ragged)
+        # x/y tile streams + tile output, plus the per-edge gather that
+        # converts tiles back to the baseline's CSR-ordered nnz vector
+        bytes_moved = eff * (2.0 * f * BYTES_F32 / bc + BYTES_F32)
+        bytes_moved += nnz * (BYTES_F32 + 12)
         flops = 2.0 * eff * f
+        n_steps = _block_ell_steps(eff, knobs) * max(f / f_chunk, 1.0)
+        return _roofline(bytes_moved, flops, hw) + n_steps * 2e-7
     else:
         raise KeyError(variant)
     return _roofline(bytes_moved, flops, hw)
@@ -117,18 +163,17 @@ def estimate_attention(feat: InputFeatures, hw: HardwareSpec, variant: str,
             # CSR<->ELL conversion: one nnz-sized gather/scatter + indices
             t += nnz * (BYTES_F32 + 8) / hw.hbm_bw
         return t
-    if variant == "fused_attention_pallas":
-        waste = knobs.get("padding_waste", 8.0)
-        eff = nnz * waste  # padded micro-tile work
+    if variant in ("fused_attention_pallas", "ragged_attention_pallas"):
+        ragged = variant == "ragged_attention_pallas"
         bc = knobs.get("bc", 8)
-        rb = knobs.get("rb", 8)
+        eff = _block_ell_elems(feat, knobs, ragged)  # padded micro-tile work
         # q/k/v/out streamed once; k,v tiles re-fetched per stored block;
         # structural mask read once; NO logits/probs HBM round-trips
         bytes_moved = (feat.n_rows * 2 + feat.n_cols * 2) * f * BYTES_F32
         bytes_moved += eff * BYTES_F32  # mask tiles
         bytes_moved += eff * (2.0 * f * BYTES_F32 / bc)  # k/v block gathers
         flops = 4.0 * eff * f + 8.0 * eff  # sddmm + spmm + online softmax
-        n_steps = (feat.n_rows / rb) * max(eff / max(feat.n_rows, 1) / bc, 1.0)
+        n_steps = _block_ell_steps(eff, knobs)
         return _roofline(bytes_moved, flops, hw) + n_steps * 2e-7
     raise KeyError(variant)
 

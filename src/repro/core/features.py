@@ -68,11 +68,22 @@ class InputFeatures:
     # fused kernel merges them, the 3-kernel pipeline does not), so the
     # registry gates fused attention on this bit
     dup_edges: bool = False
+    # block-ELL padding pressure, estimated from degrees alone (no
+    # conversion): fraction of the dense-W (n_row_blocks x W) slot grid
+    # that would be padding at the canonical rb=bc=8 blocking, in [0, 1).
+    # This is what separates the ragged kernels (pay per slot) from the
+    # dense-W kernels (pay n_row_blocks x W) in the roofline estimate,
+    # and — quantized — a ScheduleBucket axis.
+    padding_waste: float = 0.0
+    # estimated dense-W ELL width at rb=bc=8 (0 = unknown: estimates
+    # fall back to the legacy nnz-multiplier model)
+    ell_width_est: float = 0.0
 
     @staticmethod
     def from_csr(csr: CSR, f: int, op: str) -> "InputFeatures":
         qs = csr.degree_quantiles((0.5, 0.9, 0.99, 1.0))
         nnz = csr.nnz
+        waste, w_est = _block_padding_estimate(csr)
         return InputFeatures(
             n_rows=csr.n_rows,
             n_cols=csr.n_cols,
@@ -89,12 +100,52 @@ class InputFeatures:
             graph_sig=graph_signature(csr),
             f_mod_4=(f % 4 == 0),
             dup_edges=(csr.has_duplicate_edges() if op == "attention" else False),
+            padding_waste=waste,
+            ell_width_est=w_est,
         )
 
     def hub_threshold(self) -> int:
         """Default hubT: degrees beyond p99 are 'hubs' (paper sweeps this;
         AUTOSAGE_HUB_T overrides)."""
         return int(max(self.deg_p99, 4 * max(self.avg_deg, 1.0)))
+
+    # ---- derived block-ELL work estimates (canonical rb=bc=8) --------
+    def n_row_blocks8(self) -> int:
+        return -(-self.n_rows // 8)
+
+    def dense_tiles_est(self) -> float:
+        """Estimated slot-grid size n_row_blocks x W a dense-W kernel runs."""
+        return self.n_row_blocks8() * max(self.ell_width_est, 1.0)
+
+    def ragged_tiles_est(self) -> float:
+        """Estimated actual slot count a ragged kernel runs (>= one dummy
+        slot per row block)."""
+        return max(
+            self.dense_tiles_est() * (1.0 - self.padding_waste),
+            float(self.n_row_blocks8()),
+        )
+
+
+def _block_padding_estimate(csr: CSR) -> tuple:
+    """(padding_waste, ell_width_est) at rb=bc=8, from degrees alone.
+
+    Upper-bounds each 8-row block's slot count by its summed degree
+    (no intra-block column sharing), capped at n_col_blocks. Exact slot
+    counts need the conversion; this O(n) proxy only has to *rank*
+    dense-W against ragged, and it is exact in the regime that matters
+    (sparse rows hitting mostly-distinct column blocks).
+    """
+    n = csr.n_rows
+    if n == 0 or csr.nnz == 0:
+        return 0.0, 0.0
+    deg = csr.degrees.astype(np.int64)
+    nrb = -(-n // 8)
+    ncb = max(1, -(-csr.n_cols // 8))
+    block_deg = np.add.reduceat(deg, np.arange(0, n, 8))
+    slots = np.minimum(np.maximum(block_deg, 1), ncb).astype(np.float64)
+    w_est = float(slots.max())
+    waste = 1.0 - float(slots.sum()) / (nrb * w_est)
+    return waste, w_est
 
 
 # ---------------------------------------------------------------------
@@ -137,6 +188,11 @@ class ScheduleBucket:
     skew_bin: int  # floor(log2(skew)) — heavy-tail regime
     density_bin: int  # floor(log10(density))
     dup_edges: bool  # flips fused-attention applicability
+    # block-ELL padding regime: 0 (< 0.5), 1 (< 0.75), 2 (>= 0.75).
+    # Coarse on purpose — 0.75 is where ragged kernels pull >= 2x ahead
+    # of dense-W, so this is the boundary that flips decisions; finer
+    # bins would fragment hub-regime subgraph streams into extra probes.
+    waste_bin: int = 0
 
     @staticmethod
     def from_features(feat: "InputFeatures", device: Optional[str] = None) -> "ScheduleBucket":
@@ -149,6 +205,7 @@ class ScheduleBucket:
             skew_bin=_log2_bin(feat.skew),
             density_bin=_log10_bin(feat.density),
             dup_edges=feat.dup_edges,
+            waste_bin=_waste_bin(feat.padding_waste),
         )
 
     def sig(self) -> str:
@@ -158,5 +215,14 @@ class ScheduleBucket:
         dup = "dup" if self.dup_edges else "simple"
         return (
             f"r{self.rows_bin}.z{self.nnz_bin}.s{self.skew_bin}"
-            f".d{self.density_bin}.{dup}"
+            f".d{self.density_bin}.w{self.waste_bin}.{dup}"
         )
+
+
+def _waste_bin(waste: float) -> int:
+    """Monotone 3-level quantization of padding_waste."""
+    if waste >= 0.75:
+        return 2
+    if waste >= 0.5:
+        return 1
+    return 0

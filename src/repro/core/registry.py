@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.core.features import HardwareSpec, InputFeatures
 from repro.kernels import xla as kx
-from repro.sparse.bsr import csr_to_block_ell
+from repro.sparse.bsr import block_ell_edge_index, csr_to_block_ell, hub_split
 from repro.sparse.csr import CSR
 
 
@@ -156,47 +156,162 @@ def _spmm_variants(feat: InputFeatures) -> List[Variant]:
     return vs
 
 
-def _pallas_spmm_variants(feat: InputFeatures, interpret: bool) -> List[Variant]:
-    out = []
-    # f_tile wide variant = the vec4 analogue (needs F % f_tile == 0)
-    for rb, bc in ((8, 8), (16, 8)):
-        for f_tile in (128, 256):
-            def _prep(csr, rb=rb, bc=bc):
-                bell = csr_to_block_ell(csr, rb=rb, bc=bc)
-                return {
-                    "colblk": bell.colblk,
-                    "vals": bell.vals,
-                    "bc": bc,
-                    "n_col_blocks": bell.n_col_blocks,
-                }
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _spmm_hub_ragged_jit(n_rows: int, f_tile: int, interpret: bool,
+                         aux: Dict, b: jax.Array) -> jax.Array:
+    from repro.kernels.spmm_pallas import spmm_ragged_ell
 
-            def _build(aux, f_tile=f_tile, interpret=interpret):
-                from repro.kernels.spmm_pallas import spmm_block_ell
-
-                colblk = jnp.asarray(aux["colblk"])
-                vals = jnp.asarray(aux["vals"])
-                bc = aux["bc"]
-
-                def run(b):
-                    pad_rows = aux["n_col_blocks"] * bc - b.shape[0]
-                    pad_f = (-b.shape[1]) % f_tile
-                    bp = jnp.pad(b, ((0, pad_rows), (0, pad_f)))
-                    return spmm_block_ell(
-                        colblk, vals, bp, f_tile=f_tile, interpret=interpret
-                    )[:, : b.shape[1]]
-
-                return run
-
-            out.append(
-                Variant(
-                    name="block_ell_pallas",
-                    op="spmm",
-                    prepare=_prep,
-                    build=_build,
-                    applicable=lambda f, hw, ft=f_tile: f.f >= 32,
-                    knobs={"rb": rb, "bc": bc, "f_tile": f_tile},
-                )
+    out = jnp.zeros((n_rows, b.shape[1]), jnp.float32)
+    for tag in ("hub", "light"):
+        if f"{tag}_blkptr" in aux:
+            rows = aux[f"{tag}_rows"]
+            part = spmm_ragged_ell(
+                aux[f"{tag}_blkptr"], aux[f"{tag}_slot_rowblk"],
+                aux[f"{tag}_slot_colblk"], aux[f"{tag}_slot_vals"],
+                b, f_tile=f_tile, interpret=interpret,
             )
+            out = out.at[rows].set(part[: rows.shape[0]])
+    return out
+
+
+def _pad_b(b: jax.Array, pad_rows: int, pad_f: int) -> jax.Array:
+    # hot path: steady-state calls with a known-static F hit pad_f == 0
+    # (see _pallas_spmm_variants) and skip the pad op entirely
+    if pad_rows or pad_f:
+        return jnp.pad(b, ((0, pad_rows), (0, pad_f)))
+    return b
+
+
+def _pallas_spmm_variants(feat: InputFeatures, interpret: bool) -> List[Variant]:
+    """Dense-W and ragged (slot-compacted) block-ELL SpMM variants.
+
+    The dense-W grid runs W = max(nslots) slots for every row block; the
+    ragged grid runs the actual slot list of RaggedBlockELL, so its cost
+    tracks nnz_dense_tiles. Hub-split composes with ragged: each
+    partition gets its own slot-compacted layout (hub rows no longer
+    inflate the light partition's W *or* its slot count).
+    """
+    out = []
+    f_static = feat.f  # F is known at decide time: pad width is hoisted
+    # f_tile wide variant = the vec4 analogue (needs F % f_tile == 0)
+    for ragged in (False, True):
+        rbcs = ((8, 8), (16, 8), (8, 16)) if ragged else ((8, 8), (16, 8))
+        for rb, bc in rbcs:
+            for f_tile in (128, 256):
+                def _prep(csr, rb=rb, bc=bc, ragged=ragged):
+                    bell = csr_to_block_ell(csr, rb=rb, bc=bc)
+                    aux = {
+                        "bc": bc,
+                        "n_rows": csr.n_rows,
+                        "n_col_blocks": bell.n_col_blocks,
+                        "padding_frac": bell.padding_frac,
+                    }
+                    if ragged:
+                        rag = bell.to_ragged()
+                        aux.update(
+                            blkptr=rag.blkptr,
+                            slot_rowblk=rag.slot_rowblk,
+                            slot_colblk=rag.slot_colblk,
+                            slot_vals=rag.slot_vals,
+                        )
+                    else:
+                        aux.update(colblk=bell.colblk, vals=bell.vals)
+                    return aux
+
+                def _build(aux, f_tile=f_tile, interpret=interpret,
+                           ragged=ragged, f_static=f_static):
+                    from repro.kernels.spmm_pallas import (
+                        spmm_block_ell,
+                        spmm_ragged_ell,
+                    )
+
+                    dev = _dev(aux)
+                    bc = aux["bc"]
+                    n = int(aux["n_rows"])
+                    padded_cols = aux["n_col_blocks"] * bc
+                    pad_f_static = (-f_static) % f_tile
+
+                    def run(b):
+                        f = b.shape[1]
+                        pad_f = (pad_f_static if f == f_static
+                                 else (-f) % f_tile)
+                        bp = _pad_b(b, padded_cols - b.shape[0], pad_f)
+                        if ragged:
+                            o = spmm_ragged_ell(
+                                dev["blkptr"], dev["slot_rowblk"],
+                                dev["slot_colblk"], dev["slot_vals"],
+                                bp, f_tile=f_tile, interpret=interpret,
+                            )
+                        else:
+                            o = spmm_block_ell(
+                                dev["colblk"], dev["vals"], bp,
+                                f_tile=f_tile, interpret=interpret,
+                            )
+                        return o[:n, :f]
+
+                    return run
+
+                out.append(
+                    Variant(
+                        name="ragged_ell_pallas" if ragged else "block_ell_pallas",
+                        op="spmm",
+                        prepare=_prep,
+                        build=_build,
+                        applicable=lambda f, hw: f.f >= 32,
+                        knobs={"rb": rb, "bc": bc, "f_tile": f_tile,
+                               **({"ragged": True} if ragged else {})},
+                    )
+                )
+    # hub-split x ragged: per-partition slot compaction
+    hub_t = int(os.environ.get("AUTOSAGE_HUB_T", feat.hub_threshold()))
+
+    def _prep_hub_ragged(csr, t=hub_t):
+        hub, light = hub_split(csr, t)
+        aux = {"n_rows": csr.n_rows, "bc": 8,
+               "n_col_blocks": -(-csr.n_cols // 8)}
+        for tag, rows in (("hub", hub), ("light", light)):
+            if rows.size == 0:
+                continue
+            bell = csr_to_block_ell(csr, rb=8, bc=8, rows=rows)
+            rag = bell.to_ragged()
+            aux.update({
+                f"{tag}_blkptr": rag.blkptr,
+                f"{tag}_slot_rowblk": rag.slot_rowblk,
+                f"{tag}_slot_colblk": rag.slot_colblk,
+                f"{tag}_slot_vals": rag.slot_vals,
+                f"{tag}_rows": rows.astype(np.int32),
+                # dense-W padding this partition's compaction avoided —
+                # recorded for the decide-event audit trail
+                f"{tag}_padding_frac": bell.padding_frac,
+            })
+        return aux
+
+    def _build_hub_ragged(aux, interpret=interpret, f_static=f_static):
+        dev = _dev(aux)
+        n = int(aux["n_rows"])
+        padded_cols = aux["n_col_blocks"] * aux["bc"]
+        pad_f_static = (-f_static) % 128
+
+        def run(b):
+            f = b.shape[1]
+            pad_f = pad_f_static if f == f_static else (-f) % 128
+            bp = _pad_b(b, padded_cols - b.shape[0], pad_f)
+            return _spmm_hub_ragged_jit(n, 128, interpret, dev, bp)[:, :f]
+
+        return run
+
+    out.append(
+        Variant(
+            name="hub_ragged_pallas",
+            op="spmm",
+            prepare=_prep_hub_ragged,
+            build=_build_hub_ragged,
+            applicable=lambda f, hw: f.f >= 32
+            and f.deg_max > 4 * max(f.avg_deg, 1.0),
+            knobs={"rb": 8, "bc": 8, "f_tile": 128, "ragged": True,
+                   "hub_threshold": hub_t},
+        )
+    )
     return out
 
 
@@ -228,6 +343,122 @@ def _sddmm_variants(feat: InputFeatures) -> List[Variant]:
             applicable=lambda f, hw: _ell_applicable(f),
         ),
     ]
+
+
+def _sddmm_chunk(f: int) -> tuple:
+    """(padded_f, f_chunk) for the SDDMM kernels: pad F to a multiple of
+    32 (not always 128 — an F=16 input padded to 128 would do 8x the
+    real compute and X/Y traffic) and pick the largest chunk in
+    {128, 64, 32} that divides it."""
+    padded = -(-max(f, 1) // 32) * 32
+    for chunk in (128, 64, 32):
+        if padded % chunk == 0:
+            return padded, chunk
+    return padded, 32
+
+
+def _pallas_sddmm_variants(feat: InputFeatures, interpret: bool) -> List[Variant]:
+    """Block-ELL SDDMM variants (dense-W and ragged) that return the
+    baseline's CSR-ordered nnz vector: the kernel emits (rb, bc) tiles
+    and a precomputed per-edge index gathers each edge's cell back out.
+    The mask is built from structure alone (values dropped), so
+    explicitly zero-weighted edges still get their <X_i, Y_j> — matching
+    gather_dot semantics exactly.
+    """
+    out = []
+    f_static = feat.f
+    for ragged in (False, True):
+        for rb, bc in ((8, 8), (16, 8)):
+            def _prep(csr, rb=rb, bc=bc, ragged=ragged):
+                s_csr = CSR(csr.rowptr, csr.colind, None, csr.n_rows, csr.n_cols)
+                bell = csr_to_block_ell(s_csr, rb=rb, bc=bc)
+                idx = block_ell_edge_index(s_csr, bell)
+                aux = {
+                    "bc": bc,
+                    "padded_rows": bell.padded_rows,
+                    "n_col_blocks": bell.n_col_blocks,
+                    "padding_frac": bell.padding_frac,
+                    "edge_r": idx["edge_r"],
+                    "edge_c": idx["edge_c"],
+                }
+                if ragged:
+                    rag = bell.to_ragged()
+                    aux.update(
+                        slot_rowblk=rag.slot_rowblk,
+                        slot_colblk=rag.slot_colblk,
+                        mask=(rag.slot_vals != 0).astype(np.float32),
+                        edge_slot=(
+                            rag.blkptr[idx["edge_blkrow"]] + idx["edge_slot"]
+                        ).astype(np.int32),
+                    )
+                else:
+                    aux.update(
+                        colblk=bell.colblk,
+                        mask=(bell.vals != 0).astype(np.float32),
+                        edge_blkrow=idx["edge_blkrow"],
+                        edge_slot=idx["edge_slot"],
+                    )
+                return aux
+
+            def _build(aux, interpret=interpret, ragged=ragged, f_static=f_static):
+                from repro.kernels.sddmm_pallas import (
+                    sddmm_block_ell,
+                    sddmm_ragged_ell,
+                )
+
+                dev = _dev(aux)
+                bc = aux["bc"]
+                padded_rows = aux["padded_rows"]
+                padded_cols = aux["n_col_blocks"] * bc
+                padded_f_static, chunk_static = _sddmm_chunk(f_static)
+
+                def run(x, y):
+                    f = x.shape[1]
+                    padded_f, chunk = (
+                        (padded_f_static, chunk_static) if f == f_static
+                        else _sddmm_chunk(f)
+                    )
+                    xp = _pad_b(x, padded_rows - x.shape[0], padded_f - f)
+                    yp = _pad_b(y, padded_cols - y.shape[0], padded_f - f)
+                    if ragged:
+                        tiles = sddmm_ragged_ell(
+                            dev["slot_rowblk"], dev["slot_colblk"],
+                            dev["mask"], xp, yp, f_chunk=chunk,
+                            interpret=interpret,
+                        )
+                        return tiles[dev["edge_slot"], dev["edge_r"], dev["edge_c"]]
+                    tiles = sddmm_block_ell(
+                        dev["colblk"], dev["mask"], xp, yp, f_chunk=chunk,
+                        interpret=interpret,
+                    )
+                    return tiles[
+                        dev["edge_blkrow"], dev["edge_slot"],
+                        dev["edge_r"], dev["edge_c"],
+                    ]
+
+                return run
+
+            out.append(
+                Variant(
+                    name="ragged_ell_pallas" if ragged else "block_ell_pallas",
+                    op="sddmm",
+                    prepare=_prep,
+                    build=_build,
+                    applicable=(
+                        # tile-table memory, per-variant blocking: ragged
+                        # holds <= nnz slots of rb*bc*4 bytes; the dense-W
+                        # (nrb, W, rb, bc) table is ~n_rows * W * bc * 4
+                        # bytes with W up to deg_max under skew
+                        (lambda f, hw, rb=rb, bc=bc: f.f >= 16
+                         and f.nnz * rb * bc * 4 <= 512_000_000) if ragged
+                        else (lambda f, hw, bc=bc: f.f >= 16
+                              and f.n_rows * f.deg_max * bc * 4 <= 512_000_000)
+                    ),
+                    knobs={"rb": rb, "bc": bc,
+                           **({"ragged": True} if ragged else {})},
+                )
+            )
+    return out
 
 
 # ------------------------------------------ attention (whole pipelines)
@@ -289,6 +520,41 @@ def _build_attn_fused(aux: Dict, interpret: bool) -> Callable:
     return run
 
 
+def _prepare_attn_ragged(csr: CSR, rb: int, bc: int) -> Dict:
+    bell = csr_to_block_ell(_structural(csr), rb=rb, bc=bc)
+    rag = bell.to_ragged()
+    return {
+        "blkptr": rag.blkptr,
+        "slot_rowblk": rag.slot_rowblk,
+        "slot_colblk": rag.slot_colblk,
+        "mask": (rag.slot_vals != 0).astype(np.float32),
+        "padded_rows": rag.padded_rows,
+        "n_col_pad": rag.n_col_blocks * bc,
+        "n_rows": rag.n_rows,
+        "padding_frac": bell.padding_frac,
+    }
+
+
+def _build_attn_ragged(aux: Dict, interpret: bool) -> Callable:
+    from repro.kernels.attention_pallas import fused_ragged_attention
+
+    blkptr = jnp.asarray(aux["blkptr"])
+    rowblk = jnp.asarray(aux["slot_rowblk"])
+    colblk = jnp.asarray(aux["slot_colblk"])
+    mask = jnp.asarray(aux["mask"])
+    pr, ncp, n = int(aux["padded_rows"]), int(aux["n_col_pad"]), int(aux["n_rows"])
+
+    def run(q, k, v):
+        qp = jnp.pad(q, ((0, pr - q.shape[0]), (0, 0)))
+        kp = jnp.pad(k, ((0, ncp - k.shape[0]), (0, 0)))
+        vp = jnp.pad(v, ((0, ncp - v.shape[0]), (0, 0)))
+        return fused_ragged_attention(
+            blkptr, rowblk, colblk, mask, qp, kp, vp, interpret=interpret
+        )[:n]
+
+    return run
+
+
 def _attention_variants(feat: InputFeatures, include_pallas: bool,
                         interpret: bool) -> List[Variant]:
     stage_impls = {
@@ -332,6 +598,20 @@ def _attention_variants(feat: InputFeatures, include_pallas: bool,
                 knobs={"rb": rb, "bc": bc},
             )
         )
+        vs.append(
+            Variant(
+                name="ragged_attention_pallas",
+                op="attention",
+                prepare=lambda csr, rb=rb, bc=bc: _prepare_attn_ragged(csr, rb, bc),
+                build=lambda aux, interpret=interpret: _build_attn_ragged(aux, interpret),
+                # same duplicate-edge gate as the dense fused kernel, but
+                # the mask table scales with actual slots (<= nnz tiles),
+                # not n_rows x deg_max — skew no longer blows up memory
+                applicable=lambda f, hw: not f.dup_edges
+                and f.nnz * rb * bc * 4 <= 512_000_000,
+                knobs={"rb": rb, "bc": bc, "ragged": True},
+            )
+        )
     return vs
 
 
@@ -349,6 +629,8 @@ def candidates(
             vs += _pallas_spmm_variants(feat, interpret)
     elif feat.op == "sddmm":
         vs = _sddmm_variants(feat)
+        if include_pallas:
+            vs += _pallas_sddmm_variants(feat, interpret)
     elif feat.op == "attention":
         vs = _attention_variants(feat, include_pallas, interpret)
     else:

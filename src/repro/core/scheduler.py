@@ -17,6 +17,7 @@ import numpy as np
 from repro.core import estimate as est
 from repro.core import probe as probe_mod
 from repro.core import registry
+from repro.core import telemetry
 from repro.core.cache import ScheduleCache
 from repro.core.features import HardwareSpec, InputFeatures, device_sig
 from repro.core.guardrail import GuardrailDecision, apply_guardrail
@@ -218,11 +219,16 @@ class AutoSage:
         if cached is not None:
             choice = cached["choice"]
             variant = by_name.get(choice, base)
-            return Decision(
+            decision = Decision(
                 op=op, choice=choice, variant=variant, guardrail=None,
                 from_cache=True, probe_ms={}, probe_overhead_ms=0.0,
                 probe_iter_ms=0.0, estimates_ms={},
             )
+            # cache hits are emitted too: auditing stale decisions means
+            # comparing a *cached* choice against the current input's
+            # padding_waste (see telemetry.emit_decide_event)
+            telemetry.emit_decide_event(decision, feat)
+            return decision
 
         estimates, short = self.shortlist(feat, cands)
         if short:
@@ -248,6 +254,7 @@ class AutoSage:
         )
         if self.cache is not None:
             self.cache.put(key, decision.to_cache_entry())
+        telemetry.emit_decide_event(decision, feat)
         return decision
 
     # ------------------------------------------------------------------
@@ -261,6 +268,18 @@ class AutoSage:
         if runner is None:
             aux = decision.variant.prepare(csr)
             runner = decision.variant.build(aux)
+            padding = {
+                k: float(v) for k, v in aux.items()
+                if k.endswith("padding_frac")
+            }
+            if padding:
+                # exact (per-partition) dense-W padding measured by the
+                # block-ELL conversion on the full graph — the audit
+                # counterpart of the feature-estimated padding_waste
+                telemetry.emit_decide_event(
+                    decision, padding=padding, graph_sig=key[0],
+                    kind="prepare",
+                )
             while len(self._runners) >= max(self._runner_cap, 1):
                 self._runners.pop(next(iter(self._runners)))
         self._runners[key] = runner  # (re)insert at MRU position

@@ -60,6 +60,52 @@ def emit_batch_event(event: Dict) -> Optional[str]:
     return path
 
 
+def emit_decide_event(
+    decision,
+    feat=None,
+    padding: Optional[Dict] = None,
+    graph_sig: Optional[str] = None,
+    kind: str = "decide",
+) -> Optional[str]:
+    """Per-op decide/prepare events (decide_events.jsonl), keyed so cached
+    decisions can be audited against skew after the fact: a "decide"
+    event records the input's estimated `padding_waste` next to the
+    choice; a "prepare" event (emitted by build_runner) records the
+    exact per-partition `padding_frac` the block-ELL conversion
+    measured. A cached dense-W choice showing up against
+    padding_waste >= 0.75 inputs is drift — the ROADMAP's stale-decision
+    detector reads exactly this stream.
+
+    No-op unless AUTOSAGE_TELEMETRY_DIR is set. Returns the path written.
+    """
+    out = os.environ.get("AUTOSAGE_TELEMETRY_DIR")
+    if not out:
+        return None
+    path = str(Path(out) / "decide_events.jsonl")
+    rec = {
+        "kind": kind,
+        "op": decision.op,
+        "choice": decision.choice,
+        "from_cache": decision.from_cache,
+    }
+    if feat is not None:
+        rec.update(
+            graph_sig=feat.graph_sig,
+            n_rows=feat.n_rows,
+            nnz=feat.nnz,
+            f=feat.f,
+            skew=feat.skew,
+            padding_waste=feat.padding_waste,
+            ell_width_est=feat.ell_width_est,
+        )
+    if graph_sig is not None:
+        rec["graph_sig"] = graph_sig
+    if padding:
+        rec["padding_frac"] = padding
+    append_jsonl(path, rec)
+    return path
+
+
 def emit_attention_decision(decision) -> Optional[str]:
     """Per-stage breakdown stream for pipeline decisions (§8.7 analysis).
 

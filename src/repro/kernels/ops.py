@@ -14,10 +14,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.attention_pallas import fused_csr_attention
+from repro.kernels.attention_pallas import fused_csr_attention, fused_ragged_attention
 from repro.kernels.sddmm_pallas import sddmm_block_ell
 from repro.kernels.softmax_pallas import row_softmax_block_ell
-from repro.kernels.spmm_pallas import spmm_block_ell
+from repro.kernels.spmm_pallas import spmm_block_ell, spmm_ragged_ell
 from repro.sparse.bsr import BlockELL, csr_to_block_ell
 from repro.sparse.csr import CSR
 
@@ -28,7 +28,8 @@ def _interpret() -> bool:
 
 def spmm(csr: CSR, b: jax.Array, impl: str = "auto", rb: int = 8, bc: int = 8,
          f_tile: int = 128) -> jax.Array:
-    """C = A @ B. impl: auto|pallas|xla."""
+    """C = A @ B. impl: auto|pallas|ragged|xla (ragged = slot-compacted
+    Pallas kernel whose work scales with stored tiles, not ELL width)."""
     if impl == "auto":
         impl = "pallas" if not _interpret() else "xla"
     if impl == "xla":
@@ -40,10 +41,18 @@ def spmm(csr: CSR, b: jax.Array, impl: str = "auto", rb: int = 8, bc: int = 8,
     pad_rows = bell.n_col_blocks * bc - b.shape[0]
     pad_f = (-b.shape[1]) % f_tile
     bp = jnp.pad(b, ((0, pad_rows), (0, pad_f)))
-    out = spmm_block_ell(
-        jnp.asarray(bell.colblk), jnp.asarray(bell.vals), bp,
-        f_tile=f_tile, interpret=_interpret(),
-    )
+    if impl == "ragged":
+        rag = bell.to_ragged()
+        out = spmm_ragged_ell(
+            jnp.asarray(rag.blkptr), jnp.asarray(rag.slot_rowblk),
+            jnp.asarray(rag.slot_colblk), jnp.asarray(rag.slot_vals), bp,
+            f_tile=f_tile, interpret=_interpret(),
+        )
+    else:
+        out = spmm_block_ell(
+            jnp.asarray(bell.colblk), jnp.asarray(bell.vals), bp,
+            f_tile=f_tile, interpret=_interpret(),
+        )
     return out[: csr.n_rows, : b.shape[1]]
 
 
@@ -72,7 +81,9 @@ def csr_attention(
     scale: Optional[float] = None,
 ) -> jax.Array:
     """The paper's pipeline (SDDMM -> row-softmax -> SpMM). impl=pallas
-    uses the fused flash-style kernel (beyond-paper, one HBM pass)."""
+    uses the fused flash-style kernel (beyond-paper, one HBM pass);
+    impl=ragged additionally compacts the slot grid so hub rows stop
+    inflating every row block's slot count."""
     if impl == "auto":
         impl = "pallas" if not _interpret() else "xla"
     if impl == "xla":
@@ -80,14 +91,23 @@ def csr_attention(
             jnp.asarray(csr.rowptr), jnp.asarray(csr.colind), q, k, v, scale
         )
     bell = csr_to_block_ell(csr, rb=rb, bc=bc)
-    mask = jnp.asarray((bell.vals != 0).astype(np.float32))
     qp = jnp.pad(q, ((0, bell.padded_rows - q.shape[0]), (0, 0)))
     kp = jnp.pad(k, ((0, bell.n_col_blocks * bc - k.shape[0]), (0, 0)))
     vp = jnp.pad(v, ((0, bell.n_col_blocks * bc - v.shape[0]), (0, 0)))
-    out = fused_csr_attention(
-        jnp.asarray(bell.colblk), mask, qp, kp, vp, scale=scale,
-        interpret=_interpret(),
-    )
+    if impl == "ragged":
+        rag = bell.to_ragged()
+        out = fused_ragged_attention(
+            jnp.asarray(rag.blkptr), jnp.asarray(rag.slot_rowblk),
+            jnp.asarray(rag.slot_colblk),
+            jnp.asarray((rag.slot_vals != 0).astype(np.float32)),
+            qp, kp, vp, scale=scale, interpret=_interpret(),
+        )
+    else:
+        mask = jnp.asarray((bell.vals != 0).astype(np.float32))
+        out = fused_csr_attention(
+            jnp.asarray(bell.colblk), mask, qp, kp, vp, scale=scale,
+            interpret=_interpret(),
+        )
     return out[: csr.n_rows]
 
 

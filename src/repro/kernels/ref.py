@@ -122,6 +122,39 @@ def row_softmax_block_ell_ref(
     return e / jnp.maximum(denom, 1e-30)
 
 
+def spmm_ragged_ell_ref(
+    slot_rowblk: jax.Array,  # int32 (n_slots,)
+    slot_colblk: jax.Array,  # int32 (n_slots,)
+    slot_vals: jax.Array,  # f32 (n_slots, rb, bc)
+    b: jax.Array,  # (n_col_blocks*bc, F), pre-padded
+    n_row_blocks: int,
+    bc: int,
+) -> jax.Array:
+    """Slot-compacted SpMM oracle: returns (n_row_blocks*rb, F)."""
+    rb = slot_vals.shape[1]
+    b_blocks = b.reshape(-1, bc, b.shape[1])
+    gathered = b_blocks[slot_colblk]  # (S, bc, F)
+    tiles = jnp.einsum("srb,sbf->srf", slot_vals, gathered.astype(slot_vals.dtype))
+    out = jax.ops.segment_sum(tiles, slot_rowblk, num_segments=n_row_blocks)
+    return out.reshape(n_row_blocks * rb, b.shape[1])
+
+
+def sddmm_ragged_ell_ref(
+    slot_rowblk: jax.Array,
+    slot_colblk: jax.Array,
+    mask: jax.Array,  # (n_slots, rb, bc) structural 0/1
+    x: jax.Array,  # (nrb*rb, F)
+    y: jax.Array,  # (n_col_blocks*bc, F)
+    bc: int,
+) -> jax.Array:
+    """Slot-compacted SDDMM oracle: per-slot masked X_i @ Y_j^T tiles."""
+    rb = mask.shape[1]
+    xb = x.reshape(-1, rb, x.shape[1])[slot_rowblk]  # (S, rb, F)
+    yb = y.reshape(-1, bc, y.shape[1])[slot_colblk]  # (S, bc, F)
+    tiles = jnp.einsum("srf,sbf->srb", xb, yb)
+    return tiles * mask
+
+
 def csr_attention_block_ell_ref(
     colblk: jax.Array,
     mask: jax.Array,

@@ -1,8 +1,15 @@
-"""Pallas TPU kernel: block-ELL SDDMM (A~_ij = <X_i, Y_j> on S(A)).
+"""Pallas TPU kernels: block-ELL SDDMM (A~_ij = <X_i, Y_j> on S(A)).
 
-Grid = (row_blocks, ell_slots, f_chunks); accumulates the X@Y^T micro-tile
-over feature chunks and applies the structural mask on the last chunk.
-Same scalar-prefetch mechanism and knobs as the SpMM kernel.
+Dense-W (`sddmm_block_ell`): grid = (row_blocks, ell_slots, f_chunks);
+accumulates the X@Y^T micro-tile over feature chunks and applies the
+structural mask on the last chunk. Same scalar-prefetch mechanism and
+knobs as the SpMM kernel — and the same padding tax: every row block
+pays W = max(nslots) tile products.
+
+Ragged (`sddmm_ragged_ell`): grid = (n_slots, f_chunks) over the flat
+RaggedBlockELL slot list; per-slot output tiles, so compute and X/Y tile
+traffic scale with stored tiles, not n_row_blocks x W. Scalar-prefetched
+`slot_rowblk`/`slot_colblk` drive the X and Y index_maps.
 """
 from __future__ import annotations
 
@@ -67,4 +74,71 @@ def sddmm_block_ell(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(colblk, x, y, mask)
+    return out
+
+
+def _sddmm_ragged_kernel(
+    rowblk_ref, colblk_ref, x_ref, y_ref, mask_ref, out_ref, *, n_f_chunks
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x_tile = x_ref[...]  # (rb, fc)
+    y_tile = y_ref[...]  # (bc, fc)
+    out_ref[...] += jnp.dot(
+        x_tile, y_tile.T, preferred_element_type=jnp.float32
+    )[None]
+
+    @pl.when(j == n_f_chunks - 1)
+    def _mask():
+        out_ref[...] *= mask_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("f_chunk", "interpret"))
+def sddmm_ragged_ell(
+    slot_rowblk: jax.Array,  # int32 (n_slots,)
+    slot_colblk: jax.Array,  # int32 (n_slots,)
+    mask: jax.Array,  # f32 (n_slots, rb, bc) structural 0/1
+    x: jax.Array,  # (nrb*rb, F)
+    y: jax.Array,  # (n_col_blocks*bc, F)
+    f_chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Slot-compacted SDDMM: one (rb, bc) output tile per actual slot.
+
+    Returns f32 (n_slots, rb, bc) tiles in RaggedBlockELL slot order;
+    dummy slots of empty row blocks come out all-zero (their mask is 0).
+    Tile values equal the dense-W kernel's at the corresponding
+    (row block, in-block slot) — the f-chunk accumulation order is the
+    same — so outputs are value-identical where slots correspond.
+    """
+    n_slots, rb, bc = mask.shape
+    f = x.shape[1]
+    assert f % f_chunk == 0, (f, f_chunk)
+    if n_slots == 0:
+        return jnp.zeros((0, rb, bc), jnp.float32)
+    n_f_chunks = f // f_chunk
+    grid = (n_slots, n_f_chunks)
+
+    out = pl.pallas_call(
+        functools.partial(_sddmm_ragged_kernel, n_f_chunks=n_f_chunks),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((rb, f_chunk), lambda s, j, rbk, cb: (rbk[s], j)),
+                pl.BlockSpec((bc, f_chunk), lambda s, j, rbk, cb: (cb[s], j)),
+                pl.BlockSpec((1, rb, bc), lambda s, j, rbk, cb: (s, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, rb, bc), lambda s, j, rbk, cb: (s, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_slots, rb, bc), jnp.float32),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+    )(slot_rowblk, slot_colblk, x, y, mask)
     return out

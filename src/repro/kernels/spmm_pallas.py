@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: block-ELL SpMM (C = A @ B, A sparse).
+"""Pallas TPU kernels: block-ELL SpMM (C = A @ B, A sparse).
 
 TPU adaptation of the paper's SpMM templates (DESIGN.md §2):
   - grid = (row_blocks, f_tiles, ell_slots); one MXU matmul per micro-tile
@@ -10,6 +10,17 @@ TPU adaptation of the paper's SpMM templates (DESIGN.md §2):
 
 Padded slots carry zero values and colblk=0, so they contribute nothing
 (no masking needed in the hot loop).
+
+Two layouts share this file:
+  - dense-W (`spmm_block_ell`): every row block runs the full ELL width
+    W = max(nslots), so one hub row block makes every light row block
+    pay W MXU matmuls on zero tiles;
+  - ragged (`spmm_ragged_ell`): the grid's slot dimension covers the
+    *flat* slot list of RaggedBlockELL, so compute and B-tile traffic
+    scale with actual stored tiles. Scalar-prefetched `slot_rowblk`
+    drives the output index_map and `blkptr` the init-on-first-slot
+    condition; consecutive slots of one row block revisit the same
+    output block, so the accumulator stays resident in VMEM.
 """
 from __future__ import annotations
 
@@ -68,4 +79,70 @@ def spmm_block_ell(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(colblk, vals, b)
+    return out
+
+
+def _spmm_ragged_kernel(blkptr_ref, rowblk_ref, colblk_ref, vals_ref, b_ref, out_ref):
+    s = pl.program_id(1)
+    i = rowblk_ref[s]
+
+    @pl.when(s == blkptr_ref[i])
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a_tile = vals_ref[0]  # (rb, bc) f32
+    b_tile = b_ref[...]  # (bc, f_tile)
+    out_ref[...] += jnp.dot(
+        a_tile, b_tile.astype(a_tile.dtype), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("f_tile", "interpret"))
+def spmm_ragged_ell(
+    blkptr: jax.Array,  # int32 (nrb + 1,)
+    slot_rowblk: jax.Array,  # int32 (n_slots,)
+    slot_colblk: jax.Array,  # int32 (n_slots,)
+    slot_vals: jax.Array,  # f32 (n_slots, rb, bc)
+    b: jax.Array,  # (n_col_blocks*bc, F) — F % f_tile == 0
+    f_tile: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Slot-compacted SpMM: grid = (f_tiles, n_slots) over actual slots.
+
+    Slots are sorted by row block, so each output block is revisited
+    only by consecutive grid steps; `pl.when(s == blkptr[rowblk[s]])`
+    zero-initializes it on its first slot. Accumulation order matches
+    the dense-W kernel exactly (padded slots there add exact zeros), so
+    outputs are value-identical, not merely close.
+    """
+    n_slots, rb, bc = slot_vals.shape
+    nrb = blkptr.shape[0] - 1
+    n_b_rows, f = b.shape
+    assert f % f_tile == 0, (f, f_tile)
+    assert n_b_rows % bc == 0
+    if nrb == 0 or n_slots == 0:
+        # empty row subset (RaggedBlockELL guarantees >= 1 slot per
+        # block otherwise): nothing to launch
+        return jnp.zeros((nrb * rb, f), jnp.float32)
+    grid = (f // f_tile, n_slots)
+
+    out = pl.pallas_call(
+        _spmm_ragged_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, rb, bc), lambda j, s, bp, rbk, cb: (s, 0, 0)),
+                pl.BlockSpec((bc, f_tile), lambda j, s, bp, rbk, cb: (cb[s], j)),
+            ],
+            out_specs=pl.BlockSpec(
+                (rb, f_tile), lambda j, s, bp, rbk, cb: (rbk[s], j)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nrb * rb, f), jnp.float32),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+    )(blkptr, slot_rowblk, slot_colblk, slot_vals, b)
     return out

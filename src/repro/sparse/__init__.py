@@ -1,10 +1,16 @@
 """Sparse substrate: CSR/block-ELL containers, generators, reference ops."""
 from repro.sparse.csr import CSR, csr_from_coo, csr_from_dense, graph_signature
-from repro.sparse.bsr import BlockELL, csr_to_block_ell
+from repro.sparse.bsr import (
+    BlockELL,
+    RaggedBlockELL,
+    block_ell_edge_index,
+    csr_to_block_ell,
+)
 from repro.sparse.generators import (
     erdos_renyi,
     fixed_degree,
     hub_skew,
+    power_law,
     reddit_like,
     products_like,
     sample_subgraph_stream,
@@ -17,10 +23,13 @@ __all__ = [
     "csr_from_dense",
     "graph_signature",
     "BlockELL",
+    "RaggedBlockELL",
+    "block_ell_edge_index",
     "csr_to_block_ell",
     "erdos_renyi",
     "fixed_degree",
     "hub_skew",
+    "power_law",
     "reddit_like",
     "products_like",
     "sample_subgraph_stream",

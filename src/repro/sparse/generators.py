@@ -101,6 +101,32 @@ def products_like(scale: float = 0.01, seed: int = 0) -> CSR:
     return _csr_from_degrees(deg, n, rng)
 
 
+def power_law(
+    n: int,
+    alpha: float,
+    avg_deg: float = 8.0,
+    n_cols: Optional[int] = None,
+    seed: int = 0,
+) -> CSR:
+    """Power-law degree graph: degree of rank-i row ∝ (i+1)^-alpha,
+    normalized to ``avg_deg`` and shuffled over row ids.
+
+    The skew-stress knob for the ragged-vs-dense-W kernel sweep
+    (benchmarks `skew_stress`/`skew_smoke`): alpha=0 is uniform (zero
+    block-ELL padding pressure); alpha ≳ 1.2 concentrates edges in a few
+    hub rows, blowing up the dense-W ELL width W while total slot count
+    barely moves — exactly the regime where slot-compacted kernels stop
+    paying for padding.
+    """
+    rng = np.random.default_rng(seed)
+    m = n_cols if n_cols is not None else n
+    raw = np.arange(1, n + 1, dtype=np.float64) ** (-alpha)
+    deg = np.maximum(1, raw / raw.mean() * avg_deg).astype(np.int64)
+    deg = np.minimum(deg, m)  # a row cannot usefully exceed n_cols edges
+    rng.shuffle(deg)
+    return _csr_from_degrees(deg, m, rng)
+
+
 def fixed_degree(n: int, deg: int, n_cols: Optional[int] = None, seed: int = 0) -> CSR:
     """Uniform-degree graph: every row has exactly ``deg`` neighbors.
 

@@ -137,11 +137,21 @@ def test_ops_layer_dispatch():
         np.asarray(ops.spmm(csr, b, impl="xla")),
         rtol=1e-3, atol=1e-3,
     )
+    # slot-compacted kernel: value-identical to the dense-W Pallas path
+    np.testing.assert_array_equal(
+        np.asarray(ops.spmm(csr, b, impl="ragged")),
+        np.asarray(ops.spmm(csr, b, impl="pallas")),
+    )
     q = jnp.asarray(rng.standard_normal((30, 64)).astype(np.float32))
     k = jnp.asarray(rng.standard_normal((40, 64)).astype(np.float32))
     v = jnp.asarray(rng.standard_normal((40, 64)).astype(np.float32))
     np.testing.assert_allclose(
         np.asarray(ops.csr_attention(csr, q, k, v, impl="pallas")),
+        np.asarray(ops.csr_attention(csr, q, k, v, impl="xla")),
+        rtol=1e-3, atol=1e-4,
+    )
+    np.testing.assert_allclose(
+        np.asarray(ops.csr_attention(csr, q, k, v, impl="ragged")),
         np.asarray(ops.csr_attention(csr, q, k, v, impl="xla")),
         rtol=1e-3, atol=1e-4,
     )

@@ -1,0 +1,353 @@
+"""Ragged (slot-compacted) block-ELL: layout invariants, kernel equality
+with the dense-W Pallas kernels and the CSR oracles (property-based over
+random power-law graphs, interpret mode), degenerate shapes, estimate
+ranking, and the registry variants built on top."""
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline container; CI installs the real thing
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import registry
+from repro.core.estimate import estimate
+from repro.core.features import HardwareSpec, InputFeatures, ScheduleBucket
+from repro.kernels import ref
+from repro.kernels.attention_pallas import fused_csr_attention, fused_ragged_attention
+from repro.kernels.sddmm_pallas import sddmm_block_ell, sddmm_ragged_ell
+from repro.kernels.spmm_pallas import spmm_block_ell, spmm_ragged_ell
+from repro.sparse import (
+    block_ell_edge_index,
+    csr_from_dense,
+    csr_to_block_ell,
+    power_law,
+)
+from repro.sparse.csr import CSR
+
+
+def _empty_rows_csr(n: int, m: int) -> CSR:
+    return CSR(np.zeros(n + 1, np.int32), np.zeros(0, np.int32), None, n, m)
+
+
+def _ragged_spmm(rag, b, f_tile):
+    return spmm_ragged_ell(
+        jnp.asarray(rag.blkptr), jnp.asarray(rag.slot_rowblk),
+        jnp.asarray(rag.slot_colblk), jnp.asarray(rag.slot_vals),
+        jnp.asarray(b), f_tile=f_tile, interpret=True,
+    )
+
+
+# --------------------------------------------------------------- layout
+@given(
+    n=st.integers(1, 48),
+    m=st.integers(1, 48),
+    alpha=st.floats(0.0, 2.0),
+    rb=st.sampled_from([8, 16]),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=10, deadline=None)
+def test_to_ragged_invariants(n, m, alpha, rb, seed):
+    csr = power_law(n, alpha, avg_deg=3, n_cols=m, seed=seed)
+    bell = csr_to_block_ell(csr, rb=rb, bc=8)
+    rag = bell.to_ragged()
+    assert rag.n_row_blocks == bell.n_row_blocks
+    # every row block owns >= 1 slot (empty blocks get one zero dummy)
+    assert np.all(np.diff(rag.blkptr) >= 1)
+    assert rag.n_slots == rag.blkptr[-1]
+    assert rag.n_slots >= int(bell.nslots.sum())
+    # slots sorted by row block; within-block order matches dense-W
+    assert np.all(np.diff(rag.slot_rowblk) >= 0)
+    live = bell.nslots > 0
+    for i in np.nonzero(live)[0][:4]:
+        lo = rag.blkptr[i]
+        np.testing.assert_array_equal(
+            rag.slot_colblk[lo : lo + bell.nslots[i]],
+            bell.colblk[i, : bell.nslots[i]],
+        )
+    assert 0.0 <= bell.padding_frac < 1.0
+    assert bell.src_nnz == csr.nnz
+
+
+def test_empty_row_subset_is_zero_slots():
+    """csr_to_block_ell on an empty row subset: no phantom (1, min_width)
+    block — zero row blocks, and the ragged view has zero slots."""
+    csr = power_law(32, 1.0, 4, seed=0)
+    bell = csr_to_block_ell(csr, rows=np.zeros(0, np.int64),
+                            min_width=4, width_multiple=8)
+    assert bell.n_row_blocks == 0 and bell.width == 0
+    assert bell.src_nnz == 0 and bell.padding_frac == 0.0
+    rag = bell.to_ragged()
+    assert rag.n_slots == 0 and rag.n_row_blocks == 0
+    # and the kernel wrapper short-circuits to an empty result
+    b = np.ones((bell.n_col_blocks * 8 or 8, 128), np.float32)
+    out = _ragged_spmm(rag, b, 128)
+    assert out.shape == (0, 128)
+
+
+# -------------------------------------------------------------- kernels
+@given(
+    n=st.integers(1, 48),
+    m=st.integers(1, 48),
+    alpha=st.floats(0.0, 2.0),
+    rb=st.sampled_from([8, 16]),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=8, deadline=None)
+def test_ragged_spmm_matches_dense_and_ref(n, m, alpha, rb, seed):
+    """Property (interpret mode): ragged SpMM == dense-W Pallas
+    (value-identical: same tiles, same accumulation order) == CSR ref."""
+    csr = power_law(n, alpha, avg_deg=3, n_cols=m, seed=seed)
+    bell = csr_to_block_ell(csr, rb=rb, bc=8)
+    rag = bell.to_ragged()
+    rng = np.random.default_rng(seed)
+    f = 32
+    b = rng.standard_normal((bell.n_col_blocks * 8, f)).astype(np.float32)
+    dense = spmm_block_ell(
+        jnp.asarray(bell.colblk), jnp.asarray(bell.vals), jnp.asarray(b),
+        f_tile=f, interpret=True,
+    )
+    ragged = _ragged_spmm(rag, b, f)
+    assert np.array_equal(np.asarray(dense), np.asarray(ragged))
+    exp = ref.spmm_ref(
+        jnp.asarray(csr.rowptr), jnp.asarray(csr.colind), None, jnp.asarray(b)
+    )
+    np.testing.assert_allclose(
+        np.asarray(ragged)[:n], np.asarray(exp), rtol=1e-3, atol=1e-3
+    )
+    # ... and the pure-jnp ragged oracle agrees
+    oracle = ref.spmm_ragged_ell_ref(
+        jnp.asarray(rag.slot_rowblk), jnp.asarray(rag.slot_colblk),
+        jnp.asarray(rag.slot_vals), jnp.asarray(b), rag.n_row_blocks, 8,
+    )
+    np.testing.assert_allclose(
+        np.asarray(ragged), np.asarray(oracle), rtol=1e-4, atol=1e-5
+    )
+
+
+@given(
+    n=st.integers(1, 40),
+    m=st.integers(1, 40),
+    alpha=st.floats(0.0, 2.0),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=8, deadline=None)
+def test_ragged_sddmm_matches_dense_and_ref(n, m, alpha, seed):
+    """Property: per-edge SDDMM values through the ragged tile kernel ==
+    dense-W tile kernel == CSR gather_dot oracle."""
+    csr = power_law(n, alpha, avg_deg=3, n_cols=m, seed=seed)
+    bell = csr_to_block_ell(csr, rb=8, bc=8)
+    rag = bell.to_ragged()
+    idx = block_ell_edge_index(csr, bell)
+    rng = np.random.default_rng(seed)
+    f = 32
+    x = rng.standard_normal((bell.padded_rows, f)).astype(np.float32)
+    y = rng.standard_normal((bell.n_col_blocks * 8, f)).astype(np.float32)
+    tiles_d = sddmm_block_ell(
+        jnp.asarray(bell.colblk),
+        jnp.asarray((bell.vals != 0).astype(np.float32)),
+        jnp.asarray(x), jnp.asarray(y), f_chunk=f, interpret=True,
+    )
+    tiles_r = sddmm_ragged_ell(
+        jnp.asarray(rag.slot_rowblk), jnp.asarray(rag.slot_colblk),
+        jnp.asarray((rag.slot_vals != 0).astype(np.float32)),
+        jnp.asarray(x), jnp.asarray(y), f_chunk=f, interpret=True,
+    )
+    gslot = rag.blkptr[idx["edge_blkrow"]] + idx["edge_slot"]
+    vd = np.asarray(tiles_d)[
+        idx["edge_blkrow"], idx["edge_slot"], idx["edge_r"], idx["edge_c"]
+    ]
+    vr = np.asarray(tiles_r)[gslot, idx["edge_r"], idx["edge_c"]]
+    assert np.array_equal(vd, vr)
+    exp = ref.sddmm_ref(
+        jnp.asarray(csr.rowptr), jnp.asarray(csr.colind),
+        jnp.asarray(x[:n]), jnp.asarray(y[:m]),
+    )
+    np.testing.assert_allclose(vr, np.asarray(exp), rtol=1e-3, atol=1e-3)
+
+
+def test_degenerate_shapes():
+    """All-hub, all-empty-row, and single-row-block graphs through the
+    ragged SpMM kernel (the shapes the dummy-slot machinery exists for)."""
+    rng = np.random.default_rng(0)
+    f = 64
+    cases = {
+        # every row is a hub touching every column block
+        "all_hub": csr_from_dense(
+            (rng.random((24, 40)) < 0.9).astype(np.float32)
+        ),
+        # no edges at all: pure dummy slots, output must be exact zeros
+        "all_empty": _empty_rows_csr(20, 36),
+        # n <= rb: one row block
+        "single_block": power_law(5, 1.0, 3, n_cols=30, seed=1),
+    }
+    for name, csr in cases.items():
+        bell = csr_to_block_ell(csr, rb=8, bc=8)
+        rag = bell.to_ragged()
+        b = rng.standard_normal((bell.n_col_blocks * 8, f)).astype(np.float32)
+        out = _ragged_spmm(rag, b, f)
+        exp = ref.spmm_ref(
+            jnp.asarray(csr.rowptr), jnp.asarray(csr.colind), None,
+            jnp.asarray(b),
+        )
+        np.testing.assert_allclose(
+            np.asarray(out)[: csr.n_rows], np.asarray(exp),
+            rtol=1e-3, atol=1e-3, err_msg=name,
+        )
+        if name == "all_empty":
+            assert rag.n_slots == rag.n_row_blocks  # one dummy per block
+            assert (np.asarray(out) == 0).all()
+
+
+def test_ragged_attention_matches_dense_and_ref():
+    """Fused ragged attention == dense-W fused kernel == CSR pipeline
+    oracle, including rows with no edges (online-softmax falls through
+    to zero on the dummy slot)."""
+    rng = np.random.default_rng(3)
+    a = (rng.random((27, 45)) < 0.2).astype(np.float32)
+    a[5] = 0.0  # an empty row inside a live block
+    a[16:24] = 0.0  # a fully-empty row block
+    csr = csr_from_dense(a)
+    bell = csr_to_block_ell(csr, rb=8, bc=8)
+    rag = bell.to_ragged()
+    d = 64
+    q = rng.standard_normal((bell.padded_rows, d)).astype(np.float32)
+    k = rng.standard_normal((bell.n_col_blocks * 8, d)).astype(np.float32)
+    v = rng.standard_normal((bell.n_col_blocks * 8, d)).astype(np.float32)
+    out_d = fused_csr_attention(
+        jnp.asarray(bell.colblk),
+        jnp.asarray((bell.vals != 0).astype(np.float32)),
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), interpret=True,
+    )
+    out_r = fused_ragged_attention(
+        jnp.asarray(rag.blkptr), jnp.asarray(rag.slot_rowblk),
+        jnp.asarray(rag.slot_colblk),
+        jnp.asarray((rag.slot_vals != 0).astype(np.float32)),
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), interpret=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_r), np.asarray(out_d), rtol=1e-5, atol=1e-6
+    )
+    exp = ref.csr_attention_ref(
+        jnp.asarray(csr.rowptr), jnp.asarray(csr.colind),
+        jnp.asarray(q[:27]), jnp.asarray(k[:45]), jnp.asarray(v[:45]),
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_r)[:27], np.asarray(exp), rtol=1e-3, atol=1e-4
+    )
+    assert (np.asarray(out_r)[5] == 0).all()
+
+
+# ---------------------------------------------------- features/estimate
+def test_padding_waste_feature_monotone_in_skew():
+    wastes = []
+    for alpha in (0.0, 0.8, 1.6):
+        feat = InputFeatures.from_csr(
+            power_law(1024, alpha, 4, seed=0), 64, "spmm"
+        )
+        assert 0.0 <= feat.padding_waste < 1.0
+        wastes.append(feat.padding_waste)
+    assert wastes == sorted(wastes)
+    assert wastes[0] == 0.0  # uniform degrees: no padding pressure
+    assert wastes[-1] >= 0.75  # heavy hubs: the >= 2x-ragged regime
+
+
+def test_estimate_ranks_ragged_above_dense_under_skew():
+    """Acceptance: the roofline alone must prefer ragged on skewed
+    inputs (padding_waste >= 0.75) for spmm, sddmm, and attention — no
+    probing — and never rank ragged *worse* than dense-W."""
+    hw = HardwareSpec.tpu_v5e()
+    knobs = {"rb": 8, "bc": 8, "f_tile": 128}
+    pairs = {
+        "spmm": ("block_ell_pallas", "ragged_ell_pallas"),
+        "sddmm": ("block_ell_pallas", "ragged_ell_pallas"),
+        "attention": ("fused_attention_pallas", "ragged_attention_pallas"),
+    }
+    for alpha in (0.0, 1.8):
+        csr = power_law(2048, alpha, 4, seed=0)
+        for op, (dense_name, ragged_name) in pairs.items():
+            feat = InputFeatures.from_csr(csr, 64, op)
+            t_d = estimate(feat, hw, dense_name, knobs)
+            t_r = estimate(feat, hw, ragged_name, {**knobs, "ragged": True})
+            assert t_r <= t_d, (op, alpha)
+            if alpha > 0:
+                assert feat.padding_waste >= 0.75
+                assert t_r < t_d, (op, alpha)
+
+
+def test_bucket_waste_bin_quantization():
+    low = InputFeatures.from_csr(power_law(1024, 0.0, 4, seed=0), 32, "spmm")
+    high = InputFeatures.from_csr(power_law(1024, 1.8, 4, seed=0), 32, "spmm")
+    bl = ScheduleBucket.from_features(low, device="d")
+    bh = ScheduleBucket.from_features(high, device="d")
+    assert bl.waste_bin == 0 and bh.waste_bin == 2
+    assert bl.sig() != bh.sig() and ".w2." in bh.sig()
+
+
+# ------------------------------------------------------------- registry
+def test_registry_ragged_variants_present_and_correct():
+    csr = power_law(200, 1.5, 4, seed=3)
+    feat = InputFeatures.from_csr(csr, 64, "spmm")
+    vs = registry._pallas_spmm_variants(feat, interpret=True)
+    names = {v.name for v in vs}
+    assert {"block_ell_pallas", "ragged_ell_pallas", "hub_ragged_pallas"} <= names
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.standard_normal((csr.n_cols, 64)).astype(np.float32))
+    exp = ref.spmm_ref(
+        jnp.asarray(csr.rowptr), jnp.asarray(csr.colind), None, b
+    )
+    for v in vs:
+        if v.knobs.get("f_tile") == 256:
+            continue  # keep interpret-mode runtime bounded
+        out = v.build(v.prepare(csr))(b)
+        assert out.shape == (csr.n_rows, 64), v.full_name()
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(exp), rtol=2e-3, atol=2e-3,
+            err_msg=v.full_name(),
+        )
+
+
+def test_registry_sddmm_pallas_variants_correct():
+    csr = power_law(120, 1.2, 4, seed=5)
+    feat = InputFeatures.from_csr(csr, 32, "sddmm")
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((csr.n_rows, 32)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((csr.n_cols, 32)).astype(np.float32))
+    exp = ref.sddmm_ref(jnp.asarray(csr.rowptr), jnp.asarray(csr.colind), x, y)
+    vs = registry._pallas_sddmm_variants(feat, interpret=True)
+    assert {v.name for v in vs} == {"block_ell_pallas", "ragged_ell_pallas"}
+    for v in vs:
+        if v.knobs.get("rb") == 16:
+            continue
+        out = v.build(v.prepare(csr))(x, y)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(exp), rtol=2e-3, atol=2e-3,
+            err_msg=v.full_name(),
+        )
+
+
+def test_spmm_static_f_skips_padding():
+    """Satellite: with F known-static and F % f_tile == 0, run() must not
+    re-pad B (the result of jnp.pad with zero pads is a copy; we assert
+    the no-pad fast path preserves correctness and identity shape)."""
+    csr = power_law(64, 1.0, 4, seed=2)
+    feat = InputFeatures.from_csr(csr, 128, "spmm")
+    v = [
+        v for v in registry._pallas_spmm_variants(feat, interpret=True)
+        if v.name == "ragged_ell_pallas" and v.knobs["f_tile"] == 128
+        and v.knobs["rb"] == 8 and v.knobs["bc"] == 8
+    ][0]
+    run = v.build(v.prepare(csr))
+    rng = np.random.default_rng(0)
+    # n_cols == 64 == padded_cols and F == f_tile: both pads are zero, so
+    # the hoisted fast path hands b to the kernel untouched
+    b = jnp.asarray(rng.standard_normal((csr.n_cols, 128)).astype(np.float32))
+    out = run(b)
+    exp = ref.spmm_ref(
+        jnp.asarray(csr.rowptr), jnp.asarray(csr.colind), None, b
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-3, atol=2e-3)
+    # F differing from the static hint still works (fallback path)
+    b2 = jnp.asarray(rng.standard_normal((csr.n_cols, 64)).astype(np.float32))
+    out2 = run(b2)
+    assert out2.shape == (csr.n_rows, 64)
