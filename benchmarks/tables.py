@@ -547,6 +547,186 @@ def skew_smoke(full: bool = False) -> List[Tuple]:
     return rows
 
 
+# ------------------------------------------------ fleet / shared cache
+def _run_shared_worker(
+    cache: str, shared: bool, seed: int, n_graphs: int = 32,
+    replay: bool = False,
+) -> Dict:
+    """One subprocess trainer (benchmarks/shared_worker.py); returns its
+    stats JSON. Every worker (including replay) runs under the same
+    pinned backend, so device_sig cache keys always line up — and a
+    child never probes accelerator metadata."""
+    import json
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    repo = Path(__file__).resolve().parent.parent
+    cmd = [
+        sys.executable, "-m", "benchmarks.shared_worker",
+        "--cache", cache, "--n-graphs", str(n_graphs), "--rows", "256",
+        "--seed", str(seed), "--budget-ms", "10000",
+    ]
+    if shared:
+        cmd.append("--shared")
+    if replay:
+        cmd.append("--replay")
+    env = {**os.environ}
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env.pop("AUTOSAGE_REPLAY_ONLY", None)
+    out = subprocess.run(
+        cmd, capture_output=True, text=True, cwd=str(repo), env=env,
+        check=True, timeout=600,
+    )
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _drift_stream(n_stationary: int = 8, n_shifted: int = 10) -> List[CSR]:
+    """Uniform deg-18 graphs, then the same bucket with 4 hidden hub rows
+    (deg 400): bins identical (rows/nnz/skew/density/waste), but the
+    padded row-ELL table explodes — the pinned uniform-regime choice
+    goes stale mid-stream. n=1024 keeps density < 0.02 so the dense
+    fallback is gated and the uniform pick (row_ell) is deterministic."""
+    return [fixed_degree(1024, 18, seed=i) for i in range(n_stationary)] + [
+        hub_skew(1024, 18, 0.004, 400, seed=100 + i) for i in range(n_shifted)
+    ]
+
+
+def _run_drift_stream(observe: bool = True) -> "BatchScheduler":
+    """Decide + run + observe the drifting stream; returns the scheduler
+    so callers can read drift counters and per-bucket state."""
+    import time as _time
+
+    f = 32
+    sage = AutoSage(
+        cache=ScheduleCache(path=None), probe_iters=2, probe_cap_ms=50,
+        probe_frac=0.5,
+    )
+    bs = BatchScheduler(sage, probe_budget_ms=60_000)
+    rng = np.random.default_rng(0)
+    for g in _drift_stream():
+        b = jnp.asarray(rng.standard_normal((g.n_cols, f)).astype(np.float32))
+        d = bs.decide(g, f, "spmm")
+        bucket = bs.last_bucket  # decide() just derived it: don't re-pay
+        run = bs.build_runner(g, d)
+        run(b)  # warm-up absorbs compilation, as in the probe protocol
+        t0 = _time.perf_counter()
+        jax.block_until_ready(run(b))
+        if observe:
+            bs.observe(bucket, (_time.perf_counter() - t0) * 1e3)
+    bs.finalize()
+    return bs
+
+
+def shared_cache(full: bool = False) -> List[Tuple]:
+    """Fleet scheduling: N subprocess trainers over one merge-on-flush
+    schedule cache vs the same trainers isolated. Reports probes avoided
+    by sharing (warm bucket opens) and, from a regime-shifted stream,
+    decisions flipped by the drift re-probe."""
+    import tempfile
+
+    n_workers = 4 if full else 2
+    n_graphs = 64 if full else 32
+    rows: List[Tuple] = []
+    with tempfile.TemporaryDirectory() as tmp:
+        iso_probes = 0
+        for w in range(n_workers):
+            r = _run_shared_worker(
+                f"{tmp}/iso_{w}.json", shared=False, seed=w, n_graphs=n_graphs
+            )
+            iso_probes += r["stats"]["probes_run"]
+            rows.append(("isolated", w, r["stats"]["probes_run"],
+                         r["stats"]["warm_cache_opens"], r["stats"]["decides"]))
+        sh_probes = 0
+        for w in range(n_workers):
+            r = _run_shared_worker(
+                f"{tmp}/shared.json", shared=True, seed=w, n_graphs=n_graphs
+            )
+            sh_probes += r["stats"]["probes_run"]
+            rows.append(("shared", w, r["stats"]["probes_run"],
+                         r["stats"]["warm_cache_opens"], r["stats"]["decides"]))
+    bs = _run_drift_stream()
+    s = bs.stats()
+    rows.append(("drift", "-", s["probes_run"], s["drift_reprobes"],
+                 s["drift_flips"]))
+    print(f"  [shared] isolated probes={iso_probes} shared probes={sh_probes} "
+          f"(avoided {iso_probes - sh_probes}); drift re-probes="
+          f"{s['drift_reprobes']} flips={s['drift_flips']}")
+    write_csv(
+        f"{OUT}/shared_cache.csv",
+        ["mode", "worker", "probes_run", "warm_opens_or_reprobes",
+         "decides_or_flips"],
+        rows,
+    )
+    return rows
+
+
+def shared_smoke(full: bool = False) -> List[Tuple]:
+    """Seconds-fast fleet check for CI: 2 subprocess trainers over 64
+    sampled subgraphs against one shared cache must pay strictly fewer
+    probes than 2 isolated trainers; the merged cache must replay the
+    whole traffic bit-identically under AUTOSAGE_REPLAY_ONLY=1; and a
+    regime-shifted stream must trigger >= 1 drift re-probe that flips
+    the bucket's pinned decision."""
+    del full
+    import json as _json
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # --- sharing: 2x32 subgraphs, isolated vs shared ---------------
+        iso = [
+            _run_shared_worker(f"{tmp}/iso_{w}.json", shared=False, seed=w)
+            for w in range(2)
+        ]
+        shared_path = f"{tmp}/shared.json"
+        sh = [
+            _run_shared_worker(shared_path, shared=True, seed=w)
+            for w in range(2)
+        ]
+        iso_probes = sum(r["stats"]["probes_run"] for r in iso)
+        sh_probes = sum(r["stats"]["probes_run"] for r in sh)
+        assert sh_probes < iso_probes, (sh_probes, iso_probes)
+        assert sh[1]["stats"]["warm_cache_opens"] >= 1, sh[1]["stats"]
+
+        # --- replay: merged cache serves both workers' traffic ---------
+        # (replay runs in the same subprocess config as the trainers, so
+        # device_sig keys match whatever backend the workers used)
+        merged = _json.load(open(shared_path))
+        for seed in range(2):  # both workers' streams
+            r1 = _run_shared_worker(shared_path, shared=False, seed=seed,
+                                    replay=True)
+            r2 = _run_shared_worker(shared_path, shared=False, seed=seed,
+                                    replay=True)
+            assert r1["stats"]["probes_run"] == 0, r1["stats"]
+            # bit-identical across replays...
+            assert r1["trace_choices"] == r2["trace_choices"]
+            # ...and pinned to the merged cache entries
+            for key, choice in zip(r1["trace_keys"], r1["trace_choices"]):
+                assert choice == merged[key]["choice"], (key, choice)
+
+    # --- drift: regime shift re-probes and flips the decision ----------
+    bs = _run_drift_stream()
+    s = bs.stats()
+    assert s["buckets"] == 1, s  # the shift hides inside ONE bucket
+    assert s["drift_reprobes"] >= 1, s
+    assert s["drift_flips"] >= 1, s
+    first, last = bs.trace[0]["choice"], bs.trace[-1]["choice"]
+    assert first != last, (first, last)
+
+    rows = [
+        ("isolated", iso_probes, "-", "-"),
+        ("shared", sh_probes, sh[1]["stats"]["warm_cache_opens"], "-"),
+        ("drift", s["probes_run"], s["drift_reprobes"], s["drift_flips"]),
+    ]
+    for mode, probes, warm, flips in rows:
+        print(f"  [shared-smoke] {mode:9s} probes={probes} "
+              f"warm_or_reprobes={warm} flips={flips}")
+    write_csv(f"{OUT}/shared_smoke.csv",
+              ["mode", "probes", "warm_opens_or_reprobes", "flips"], rows)
+    return rows
+
+
 def smoke(full: bool = False) -> List[Tuple]:
     """Seconds-fast bit-rot check for CI (--smoke): one scheduled SpMM and
     one pipeline-level attention decision on tiny graphs, results checked
@@ -595,6 +775,7 @@ ALL_TABLES = {
     "csr_attention": csr_attention_pipeline,
     "batch_stream": batch_stream,
     "skew_stress": skew_stress,
+    "shared_cache": shared_cache,
 }
 
 # run only via --smoke (CI) or --only <name>; not part of the default sweep
@@ -602,4 +783,5 @@ SMOKE_TABLES = {
     "smoke": smoke,
     "batch_smoke": batch_smoke,
     "skew_smoke": skew_smoke,
+    "shared_smoke": shared_smoke,
 }

@@ -12,8 +12,18 @@ probing per subgraph:
 
     PYTHONPATH=src python examples/train_gnn.py --minibatch 1024 \
         --epochs 5 --probe-budget-ms 2000
+
+Fleet mode — N subprocess trainers share ONE schedule cache
+(merge-on-flush under a lockfile; each trainer opens buckets warm from
+its peers' probes and re-probes buckets whose observed runtime drifts):
+
+    PYTHONPATH=src python examples/train_gnn.py --minibatch 1024 \
+        --epochs 2 --workers 4 --cache fleet_cache.json
 """
 import argparse
+import json
+import os
+import subprocess
 import sys
 import time
 
@@ -66,13 +76,18 @@ def train_full(args, cfg, graph, x, y, classes, in_dim):
 def train_minibatch(args, cfg, graph, x, y, classes, in_dim):
     """Sampled-subgraph training: one BatchScheduler serves the whole
     stream of per-step induced subgraphs (one probe per schedule bucket,
-    provisional baseline until the budget reaches a bucket)."""
+    provisional baseline until the budget reaches a bucket). Each
+    step's wall time feeds `observe` — a coarse signal (fwd+bwd, not
+    the aggregation kernel alone, so kernel-level drift is diluted by
+    the step's fixed cost); a production trainer would time the
+    scheduled aggregation call itself, as tests/test_drift.py and the
+    shared_smoke drift phase do."""
     sage = AutoSage(
-        cache=ScheduleCache(path=args.cache or None),
+        cache=ScheduleCache(path=args.cache or None, shared=args.shared or None),
         probe_iters=2, probe_cap_ms=200, probe_frac=0.25,
     )
     params = init_gnn(cfg, jax.random.PRNGKey(0), in_dim, classes)
-    rng = np.random.default_rng(1)
+    rng = np.random.default_rng(1 + args.worker_id)
     lr, t0 = 0.05, time.time()
     steps_per_epoch = max(1, graph.n_rows // args.minibatch)
 
@@ -91,7 +106,13 @@ def train_minibatch(args, cfg, graph, x, y, classes, in_dim):
                     logp = jax.nn.log_softmax(logits)
                     return -jnp.take_along_axis(logp, yb[:, None], 1).mean()
 
+                t_step = time.perf_counter()
                 loss, g = jax.value_and_grad(loss_fn)(params)
+                jax.block_until_ready(loss)
+                step_ms = (time.perf_counter() - t_step) * 1e3
+                # the forward's decide already bucketed this subgraph;
+                # last_bucket avoids a second feature extraction per step
+                bs.observe(bs.last_bucket, step_ms)
                 params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
                 losses.append(float(loss))
             print(
@@ -101,12 +122,59 @@ def train_minibatch(args, cfg, graph, x, y, classes, in_dim):
     s = bs.stats()
     print(
         f"batched decide: {s['decides']} decides -> {s['buckets']} buckets, "
-        f"{s['probes_run']} probes ({s['probes_avoided']} avoided), "
-        f"probe budget spent {s['probe_spent_ms']:.0f}/"
-        f"{s['probe_budget_ms']:.0f}ms"
+        f"{s['probes_run']} probes ({s['probes_avoided']} avoided, "
+        f"{s['warm_cache_opens']} opened warm from the shared cache), "
+        f"drift: {s['drift_flags']} flags / {s['drift_reprobes']} re-probes / "
+        f"{s['drift_flips']} flips, probe budget spent "
+        f"{s['probe_spent_ms']:.0f}/{s['probe_budget_ms']:.0f}ms"
     )
     for row in bs.bucket_stats():
         print(f"  bucket {row['bucket']}: hits={row['hits']} choice={row['choice']}")
+    if args.stats_json:
+        with open(args.stats_json, "w") as fh:
+            json.dump(s, fh)
+
+
+def train_fleet(args):
+    """Spawn --workers subprocess trainers against ONE shared schedule
+    cache: each worker re-runs this script in --minibatch mode with
+    AUTOSAGE_CACHE_SHARED=1, so bucket probes paid by one worker are
+    opened warm by the rest (merge-on-flush, core/cache.py)."""
+    cache = args.cache or "fleet_cache.json"
+    procs, stats_paths = [], []
+    for w in range(args.workers):
+        stats_path = f"{cache}.worker{w}.stats.json"
+        stats_paths.append(stats_path)
+        cmd = [
+            sys.executable, os.path.abspath(__file__),
+            "--minibatch", str(args.minibatch), "--epochs", str(args.epochs),
+            "--scale", str(args.scale), "--cache", cache, "--shared",
+            "--probe-budget-ms", str(args.probe_budget_ms),
+            "--worker-id", str(w), "--stats-json", stats_path,
+        ]
+        env = {**os.environ, "AUTOSAGE_CACHE_SHARED": "1"}
+        # a worker that inherits no backend must not probe accelerator
+        # metadata (minutes of hang on cloud hosts); parent's choice wins
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        procs.append(subprocess.Popen(cmd, env=env))
+    rcs = [p.wait() for p in procs]
+    if any(rcs):
+        raise SystemExit(f"worker exit codes: {rcs}")
+    totals = {"decides": 0, "probes_run": 0, "warm_cache_opens": 0,
+              "drift_reprobes": 0, "drift_flips": 0}
+    for sp in stats_paths:
+        with open(sp) as fh:
+            s = json.load(fh)
+        for k in totals:
+            totals[k] += s.get(k, 0)
+        os.unlink(sp)
+    print(
+        f"fleet of {args.workers}: {totals['decides']} decides, "
+        f"{totals['probes_run']} probes total, "
+        f"{totals['warm_cache_opens']} buckets opened warm from peers, "
+        f"{totals['drift_reprobes']} drift re-probes "
+        f"({totals['drift_flips']} flipped); merged cache: {cache}"
+    )
 
 
 def main():
@@ -119,7 +187,21 @@ def main():
                     help="shared probe budget for the minibatch stream")
     ap.add_argument("--cache", default="",
                     help="schedule cache path (minibatch mode); empty = in-memory")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="fleet mode: N subprocess trainers against one "
+                         "shared cache (implies --minibatch)")
+    ap.add_argument("--shared", action="store_true",
+                    help="merge-on-flush shared cache "
+                         "(set automatically in fleet workers)")
+    ap.add_argument("--worker-id", type=int, default=0, help=argparse.SUPPRESS)
+    ap.add_argument("--stats-json", default="", help=argparse.SUPPRESS)
     args = ap.parse_args()
+
+    if args.workers:
+        if not args.minibatch:
+            args.minibatch = 1024
+        train_fleet(args)
+        return
 
     cfg = get_config("gnn_sage")
     graph = reddit_like(scale=args.scale)

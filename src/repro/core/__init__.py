@@ -9,9 +9,16 @@ from repro.core.features import (
     InputFeatures,
     ScheduleBucket,
     device_sig,
+    waste_bin,
 )
 from repro.core.scheduler import AutoSage, Decision, ProbeOutcome
-from repro.core.cache import CacheKey, ScheduleCache, ReplayMiss, parse_key
+from repro.core.cache import (
+    CacheKey,
+    CacheLockTimeout,
+    ScheduleCache,
+    ReplayMiss,
+    parse_key,
+)
 from repro.core.guardrail import apply_guardrail, GuardrailDecision
 from repro.core.pipeline import AttentionDecision
 from repro.core.batch import BatchScheduler
@@ -21,6 +28,7 @@ __all__ = [
     "AttentionDecision",
     "BatchScheduler",
     "CacheKey",
+    "CacheLockTimeout",
     "Decision",
     "HardwareSpec",
     "InputFeatures",
@@ -32,4 +40,5 @@ __all__ = [
     "GuardrailDecision",
     "device_sig",
     "parse_key",
+    "waste_bin",
 ]

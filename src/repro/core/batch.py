@@ -21,9 +21,26 @@ exploits exactly that:
      (hits x roofline headroom), and each bucket's decision upgrades in
      place once its probe completes;
   3. every decide is recorded in a stream trace, and `finalize()` pins
-     all bucket decisions into the cache (schema v3 bucket keys,
+     all bucket decisions into the cache (schema v4 bucket keys,
      core/cache.py) so an entire epoch of bucketed decisions replays
-     deterministically under AUTOSAGE_REPLAY_ONLY=1.
+     deterministically under AUTOSAGE_REPLAY_ONLY=1;
+  4. a pinned decision is NOT trusted forever: `observe(bucket, ms)`
+     feeds each bucket a windowed EWMA of the runtimes the trainer
+     actually saw, and the **drift detector** re-enqueues a bucket on
+     the probe budget (with decayed priority) when that EWMA departs
+     from the probe-time estimate by AUTOSAGE_DRIFT_RATIO, or when the
+     incoming graphs' `padding_waste` crosses a waste-bin boundary away
+     from the probe representative's — the exact stale-decision failure
+     mode Dai et al. ("Heuristic Adaptability to Input Dynamics for
+     SpMM on GPUs") show rule-based choices suffer. The re-probe runs
+     on the *newest* graph seen in the bucket (the drifted regime's
+     representative, not the stale one), and fused-vs-composed flips of
+     attention pipelines are tracked per regime in the stream telemetry.
+
+With a shared cache (AUTOSAGE_CACHE_SHARED=1), bucket entries carry the
+running stats across processes: a fleet of trainers opens buckets warm
+from peers' probes (probes-avoided-by-sharing), merges traffic counts on
+flush, and the freshest re-probe of a drifted bucket wins fleet-wide.
 
 Entry points mirror the per-graph scheduler (`decide` / `build_runner` /
 `spmm` / `sddmm` / `attention`), so model code written against `AutoSage`
@@ -35,15 +52,38 @@ import dataclasses
 import os
 import time
 import zlib
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Union
 
 from repro.core import registry, telemetry
 from repro.core.cache import ScheduleCache
-from repro.core.features import InputFeatures, ScheduleBucket, device_sig
+from repro.core.features import (
+    InputFeatures,
+    ScheduleBucket,
+    device_sig,
+    waste_bin,
+)
 from repro.core.scheduler import AutoSage, Decision
 from repro.sparse.csr import CSR
 
 DEFAULT_PROBE_BUDGET_MS = float(os.environ.get("AUTOSAGE_BATCH_BUDGET_MS", "2000"))
+# observed-runtime EWMA: exact running mean for the first WINDOW
+# observations (permutation-invariant startup), then exponential with
+# beta = 1/WINDOW — recent regime shifts dominate, old regimes age out
+DEFAULT_EWMA_WINDOW = int(os.environ.get("AUTOSAGE_EWMA_WINDOW", "16"))
+# drift fires when ewma/probe_est leaves [1/ratio, ratio]
+DEFAULT_DRIFT_RATIO = float(os.environ.get("AUTOSAGE_DRIFT_RATIO", "1.5"))
+# ... but only after this many observations since the last (re-)probe
+DEFAULT_DRIFT_MIN_OBS = int(os.environ.get("AUTOSAGE_DRIFT_MIN_OBS", "5"))
+# each re-probe decays the bucket's pump priority by this factor, so a
+# flapping bucket cannot starve never-probed buckets of the budget
+DEFAULT_DRIFT_DECAY = float(os.environ.get("AUTOSAGE_DRIFT_DECAY", "0.5"))
+# padding-waste drift: |live waste - waste_at_probe| >= this flags the
+# bucket. One waste bin spans up to 0.5 of raw waste (bins 0.5/0.75),
+# and dense-W padded work scales like 1/(1-waste) — a 0.75 -> 0.95 move
+# inside bin 2 is a 5x work change the bin alone can never see
+DEFAULT_DRIFT_WASTE_DELTA = float(
+    os.environ.get("AUTOSAGE_DRIFT_WASTE_DELTA", "0.25")
+)
 
 
 @dataclasses.dataclass
@@ -64,15 +104,58 @@ class _BucketState:
     decision: Optional[Decision] = None  # None => provisional baseline
     provisional: Optional[Decision] = None
     probe_charge_ms: float = 0.0
+    # --- online statistics + drift state (schema v4) ---
+    obs: int = 0  # observations since the last (re-)probe
+    ewma_ms: Optional[float] = None  # windowed EWMA of observed runtimes
+    probe_est_ms: Optional[float] = None  # probe-measured ms of the choice
+    waste_at_probe: Optional[float] = None  # rep padding_waste at probe time
+    # the runtime-drift reference: the probe-time estimate *calibrated*
+    # to steady-state wall clock by the first drift_min_obs observations
+    # after the (re-)probe (raw slope-probe ms excludes per-call dispatch
+    # overhead, so comparing it to wall times directly misfires). A
+    # warm-opened bucket inherits the probing peer's EWMA instead — so a
+    # trainer that never probed still notices the pinned choice going
+    # stale under its own traffic.
+    ref_ms: Optional[float] = None
+    _first_sum: float = 0.0
+    reprobes: int = 0  # completed drift re-probes
+    drift_flagged: bool = False  # pending on the budget for a re-probe
+    drift_reason: str = ""
+    hits_flushed: int = 0  # hits already pushed into the cache
+    # newest graph seen: the re-probe representative after a drift flag
+    # (probing the stale rep would just re-measure the old regime)
+    last_csr: Optional[CSR] = None
+    last_feat: Optional[InputFeatures] = None
 
     def current(self) -> Decision:
         return self.decision if self.decision is not None else self.provisional
 
     def priority(self) -> tuple:
         """Traffic-weighted estimated gain; positive-headroom buckets
-        always outrank zero-headroom ones, ties break on traffic."""
+        always outrank zero-headroom ones, ties break on traffic. Every
+        completed re-probe decays the weight, so drift-flapping buckets
+        yield the budget to fresh ones."""
+        decay = DEFAULT_DRIFT_DECAY ** self.reprobes
         gain = max(self.est_gain_ms, 0.0)
-        return (gain > 0.0, self.hits * gain, self.hits)
+        if self.drift_flagged and gain == 0.0:
+            # a drifted bucket re-enters the queue even when its original
+            # estimate saw no headroom: the observed runtime says the
+            # estimate is stale
+            gain = 1e-6
+        return (gain > 0.0, self.hits * gain * decay, self.hits * decay)
+
+
+def _attention_family(choice: Optional[str]) -> str:
+    """Coarse pipeline family of an attention choice, for flip telemetry:
+    the interesting regime signal is fused <-> composed, not which exact
+    layout pair won."""
+    if choice is None:
+        return "none"
+    if choice == "baseline":
+        return "baseline"
+    if "attention" in choice:  # fused_attention_pallas / ragged_attention_*
+        return "fused"
+    return "composed"  # pipe[sddmm=...,spmm=...]
 
 
 class BatchScheduler:
@@ -98,13 +181,28 @@ class BatchScheduler:
         self.max_probes_per_decide = max_probes_per_decide
         self.auto_pump = auto_pump
         self.seed = seed
+        self.ewma_window = DEFAULT_EWMA_WINDOW
+        self.drift_ratio = DEFAULT_DRIFT_RATIO
+        self.drift_min_obs = DEFAULT_DRIFT_MIN_OBS
+        self.drift_waste_delta = DEFAULT_DRIFT_WASTE_DELTA
         self._device = device_sig()
         self._buckets: Dict[str, _BucketState] = {}
+        # observe() routing: keyed by the FULL bucket (sig() alone omits
+        # op/F/device, so same-shape buckets for different ops would
+        # swallow each other's runtime observations)
+        self._by_bucket: Dict[ScheduleBucket, _BucketState] = {}
+        # zero-cost handle for "observe the decide I just made": decide()
+        # already extracted the features, don't pay them again
+        self.last_bucket: Optional[ScheduleBucket] = None
         self.probe_spent_ms = 0.0
         self.trace: List[Dict[str, Any]] = []
         self._decides = 0
         self._probe_passes = 0
         self._decide_wall_ms = 0.0
+        self._warm_opens = 0  # buckets opened final from the (shared) cache
+        self.drift_flags = 0
+        self.drift_reprobes = 0
+        self.drift_flips = 0
 
     # ---------------------------------------------------------- decide
     def decide(self, csr: CSR, f: int, op: str) -> Decision:
@@ -119,10 +217,23 @@ class BatchScheduler:
         )
         st = self._buckets.get(key)
         if st is None:
+            if (
+                self.cache.shared and not self.cache.replay_only
+                and not self.cache.contains(key)
+            ):
+                # a fleet peer may have probed this bucket since we
+                # loaded: one cheap mtime stat before paying a probe.
+                # Never in replay mode — replay serves the file AS LOADED
+                # or two replays of one stream could differ
+                self.cache.maybe_reload()
             st = self._open_bucket(bucket, key, csr, feat)
             self._buckets[key] = st
+            self._by_bucket[bucket] = st
         st.hits += 1
+        st.last_csr, st.last_feat = csr, feat
+        self.last_bucket = bucket
         self._decides += 1
+        self._check_waste_drift(st, feat)
         if self.auto_pump and not self.cache.replay_only:
             self.pump(self.max_probes_per_decide)
         d = st.current()
@@ -130,6 +241,9 @@ class BatchScheduler:
             "bucket-cache" if (st.probed and st.decision is not None
                                and st.decision.from_cache)
             else "probe" if st.probed
+            # flagged bucket awaiting its re-probe: still serves the last
+            # pinned decision, not the provisional baseline
+            else "drift-pending" if st.decision is not None
             else "provisional"
         )
         self._decide_wall_ms += (time.perf_counter() - t0) * 1e3
@@ -147,17 +261,44 @@ class BatchScheduler:
         # replay / warm-start: a pinned bucket decision ends the story.
         # In replay-only mode a miss raises ReplayMiss — the contract.
         cached = self.cache.get(key)
-        if cached is not None:
+        # Two cached shapes must NOT be adopted as final outside replay:
+        #  - a peer's never-probed provisional baseline ("probed": False,
+        #    pinned by its finalize) — a worker WITH budget treats it as
+        #    pending and probes, and its probed_at > 0 wins the merge;
+        #  - a choice this process cannot construct (peer probed under
+        #    AUTOSAGE_PROBE_PALLAS or different gates) — silently running
+        #    baseline while reporting the peer's choice would corrupt
+        #    trace/telemetry AND calibrate drift against the wrong
+        #    variant's reference. Probing fresh re-pins it honestly.
+        # Replay mode still serves both as final (replay is immutable;
+        # an unconstructible choice degrades to the baseline variant).
+        cached_unusable = (
+            cached is not None and not self.cache.replay_only
+            and (
+                cached.get("probed") is False
+                or cached["choice"] not in by_name
+            )
+        )
+        if cached is not None and not cached_unusable:
             choice = cached["choice"]
             decision = Decision(
                 op=feat.op, choice=choice, variant=by_name.get(choice, base),
                 guardrail=None, from_cache=True, probe_ms={},
                 probe_overhead_ms=0.0, probe_iter_ms=0.0, estimates_ms={},
             )
+            self._warm_opens += 1
+            stats = cached.get("stats") or {}
             return _BucketState(
                 bucket=bucket, key=key, rep_csr=csr, rep_feat=feat, base=base,
                 by_name=by_name, estimates_ms={}, est_gain_ms=0.0,
                 has_challengers=False, probed=True, decision=decision,
+                # drift references travel with the shared entry: a trainer
+                # that never probed this bucket itself can still detect
+                # that the pinned choice went stale under ITS traffic
+                probe_est_ms=stats.get("probe_est_ms"),
+                waste_at_probe=stats.get("waste_at_probe"),
+                ref_ms=stats.get("ewma_ms"),
+                reprobes=max(int(stats.get("probes") or 1) - 1, 0),
             )
 
         estimates, short = self.sage.shortlist(feat, cands)
@@ -207,8 +348,28 @@ class BatchScheduler:
 
     def _probe_bucket(self, st: _BucketState) -> None:
         """Run the full per-graph decision procedure on the bucket's
-        representative graph and pin the outcome for the whole bucket."""
-        seed = self._bucket_seed(st)
+        representative graph and pin the outcome for the whole bucket.
+        On a drift re-probe the representative is refreshed to the newest
+        graph seen (the drifted regime), the candidate pool and estimates
+        are re-derived from its features, and an old->new choice flip is
+        recorded."""
+        was_drift = st.drift_flagged
+        old_choice = st.decision.choice if st.decision is not None else None
+        if was_drift and st.last_csr is not None:
+            st.rep_csr, st.rep_feat = st.last_csr, st.last_feat
+            cands = registry.candidates(st.rep_feat, self.sage.hw)
+            st.base = registry.baseline(st.rep_feat, self.sage.hw)
+            st.by_name = {v.full_name(): v for v in cands}
+            st.by_name["baseline"] = st.base
+            st.estimates_ms, short = self.sage.shortlist(st.rep_feat, cands)
+            st.has_challengers = bool(short)
+        if was_drift:
+            # count the re-probe BEFORE deriving the seed, so even the
+            # first re-probe measures under fresh probe RNG (reprobes is
+            # 0 until here — seed would repeat the original probe's)
+            st.reprobes += 1
+            self.drift_reprobes += 1
+        seed = self._bucket_seed(st) + st.reprobes
         with self.cache:  # defer flushing: exact + bucket puts -> one write
             if st.rep_feat.op == "attention":
                 d = self.sage.decide_attention(st.rep_csr, st.rep_feat.f, seed=seed)
@@ -216,23 +377,172 @@ class BatchScheduler:
                 d = self.sage.decide(
                     st.rep_csr, st.rep_feat.f, st.rep_feat.op, seed=seed
                 )
+            st.probed = True
+            st.decision = d
+            st.probe_est_ms = d.probe_ms.get(d.choice)
+            st.waste_at_probe = st.rep_feat.padding_waste
+            # the new probe resets the regime: statistics restart, and
+            # the drift reference re-calibrates from upcoming traffic
+            st.obs, st.ewma_ms = 0, None
+            st.ref_ms, st._first_sum = None, 0.0
+            if was_drift:
+                st.drift_flagged = False
             self.cache.put(st.key, self._bucket_entry(st, d))
-        st.probed = True
-        st.decision = d
+            self._push_stats(st)
         st.probe_charge_ms = d.probe_overhead_ms  # 0 on an exact-key hit
         self.probe_spent_ms += st.probe_charge_ms
         self._probe_passes += 1
+        flipped = was_drift and old_choice is not None and d.choice != old_choice
+        if flipped:
+            self.drift_flips += 1
+        event = {
+            "event": "drift_reprobe" if was_drift else "bucket_probe",
+            "bucket": st.bucket.sig(),
+            "op": st.rep_feat.op,
+            "f": st.rep_feat.f,
+            "choice": d.choice,
+            "probe_overhead_ms": d.probe_overhead_ms,
+            "budget_spent_ms": self.probe_spent_ms,
+            "budget_ms": self.probe_budget_ms,
+        }
+        if was_drift:
+            event.update(
+                old_choice=old_choice, flipped=flipped, reason=st.drift_reason,
+                reprobes=st.reprobes,
+            )
+            if st.rep_feat.op == "attention":
+                # fused-vs-composed flips are the regime signal the
+                # pipeline scheduler cares about (§8.7): label both sides
+                event.update(
+                    old_family=_attention_family(old_choice),
+                    new_family=_attention_family(d.choice),
+                )
+        telemetry.emit_batch_event(event)
+
+    # ------------------------------------------------- online statistics
+    def bucket_of(self, csr: CSR, f: int, op: str) -> ScheduleBucket:
+        """The schedule bucket this graph canonicalizes into (the handle
+        `observe` takes)."""
+        return ScheduleBucket.from_features(
+            InputFeatures.from_csr(csr, f, op), self._device
+        )
+
+    def observe(
+        self, bucket: Union[ScheduleBucket, str], runtime_ms: float
+    ) -> None:
+        """Feed one observed runtime (ms) of the bucket's pinned decision
+        back into its statistics. Takes a `ScheduleBucket` (from
+        `bucket_of`, or `last_bucket` right after a decide); a sig()
+        string is accepted only while it is unambiguous — sigs omit
+        op/F/device, so once two ops share a shape regime a string would
+        mis-attribute the runtime, and is ignored instead. Unknown
+        buckets are ignored too (a trainer may observe work scheduled
+        before a restart).
+
+        The EWMA is windowed: for the first `ewma_window` observations it
+        is the exact arithmetic mean (so early drift verdicts do not
+        depend on arrival order), after which it decays exponentially
+        with beta = 1/window."""
+        if isinstance(bucket, ScheduleBucket):
+            st = self._by_bucket.get(bucket)
+        else:
+            matches = [
+                s for b, s in self._by_bucket.items() if b.sig() == bucket
+            ]
+            st = matches[0] if len(matches) == 1 else None
+        if st is None or runtime_ms < 0:
+            return
+        st.obs += 1
+        beta = 1.0 / min(st.obs, self.ewma_window)
+        st.ewma_ms = (
+            runtime_ms if st.ewma_ms is None
+            else st.ewma_ms + beta * (runtime_ms - st.ewma_ms)
+        )
+        if st.ref_ms is None:
+            # calibrate the drift reference from the first min_obs
+            # observations delivered by the freshly probed decision
+            st._first_sum += runtime_ms
+            if st.obs >= self.drift_min_obs:
+                st.ref_ms = st._first_sum / st.obs
+        self._check_runtime_drift(st)
+
+    def _check_runtime_drift(self, st: _BucketState) -> None:
+        """Flag the bucket when the observed-runtime EWMA departs from
+        the calibrated probe-time reference by more than drift_ratio
+        (either direction: slower means the pinned choice is losing,
+        faster means a cheaper regime where a different choice may now
+        win)."""
+        if (
+            st.drift_flagged or not st.probed or st.decision is None
+            or st.ref_ms is None or st.ewma_ms is None
+            or st.obs < self.drift_min_obs
+        ):
+            return
+        ratio = st.ewma_ms / max(st.ref_ms, 1e-9)
+        if ratio > self.drift_ratio or ratio < 1.0 / self.drift_ratio:
+            self._flag_drift(
+                st, f"runtime_ewma {st.ewma_ms:.3f}ms vs reference "
+                f"{st.ref_ms:.3f}ms (x{ratio:.2f})"
+            )
+
+    def _check_waste_drift(self, st: _BucketState, feat: InputFeatures) -> None:
+        """Flag the bucket when incoming graphs' padding_waste departs
+        from the probe representative's by more than drift_waste_delta,
+        or crosses a waste-bin boundary — the block-ELL padding regime
+        the decision was probed under no longer describes the traffic
+        (PR 3's decide_events audit signal, acted on).
+
+        The raw-delta test is the one reachable in-process: waste_bin is
+        part of the bucket sig, so same-bucket traffic can never change
+        bins, but bins are coarse (up to 0.5 wide, and bin 2 is open
+        toward 1.0 where dense-W work diverges) — waste can move a long
+        way inside one. The bin test additionally covers entries whose
+        waste_at_probe predates a re-binning (older cache schema, foreign
+        writer)."""
+        if st.drift_flagged or not st.probed or st.waste_at_probe is None:
+            return
+        if (
+            abs(feat.padding_waste - st.waste_at_probe) >= self.drift_waste_delta
+            or waste_bin(feat.padding_waste) != waste_bin(st.waste_at_probe)
+        ):
+            self._flag_drift(
+                st, f"padding_waste {feat.padding_waste:.3f} departed the "
+                f"probe-time regime (waste_at_probe={st.waste_at_probe:.3f})"
+            )
+
+    def _flag_drift(self, st: _BucketState, reason: str) -> None:
+        """Re-enqueue a probed bucket on the probe budget. The stale
+        decision keeps serving until the re-probe lands (guardrail-safe:
+        it was the best known mapping, just possibly no longer), and
+        priority() decays per completed re-probe."""
+        if self.cache.replay_only:
+            return  # replay is immutable by contract
+        st.drift_flagged = True
+        st.probed = False
+        st.drift_reason = reason
+        self.drift_flags += 1
         telemetry.emit_batch_event(
             {
-                "event": "bucket_probe",
+                "event": "drift_flag",
                 "bucket": st.bucket.sig(),
-                "op": st.rep_feat.op,
-                "f": st.rep_feat.f,
-                "choice": d.choice,
-                "probe_overhead_ms": d.probe_overhead_ms,
-                "budget_spent_ms": self.probe_spent_ms,
-                "budget_ms": self.probe_budget_ms,
+                "op": st.bucket.op,
+                "f": st.bucket.f,
+                "choice": st.decision.choice if st.decision else "baseline",
+                "reason": reason,
+                "obs": st.obs,
+                "ewma_ms": st.ewma_ms,
+                "probe_est_ms": st.probe_est_ms,
             }
+        )
+
+    def _push_stats(self, st: _BucketState) -> None:
+        """Fold this bucket's local traffic + observations into its cache
+        entry (hit deltas merge-sum across the fleet)."""
+        self.cache.add_hits(st.key, st.hits - st.hits_flushed)
+        st.hits_flushed = st.hits
+        self.cache.update_stats(
+            st.key, obs=st.obs, ewma_ms=st.ewma_ms,
+            probe_est_ms=st.probe_est_ms, waste_at_probe=st.waste_at_probe,
         )
 
     def _bucket_seed(self, st: _BucketState) -> int:
@@ -248,6 +558,21 @@ class BatchScheduler:
             "rep_graph_sig": st.rep_feat.graph_sig,
             "probe_ms": d.probe_ms,
             "estimates_ms": st.estimates_ms,
+            # probed=False marks a pinned-provisional baseline: peers and
+            # replays can tell "measured winner" from "budget never got
+            # here" (the latter has no probe_est_ms to drift against)
+            "probed": bool(d.probe_ms) or d.from_cache,
+            "stats": {
+                "probe_est_ms": st.probe_est_ms,
+                "waste_at_probe": st.waste_at_probe,
+                # an exact-key revalidation counts as a fresh pin too —
+                # only never-probed provisional baselines stay at 0.0 and
+                # lose every merge against a measured peer entry
+                "probed_at": time.time() if (d.probe_ms or d.from_cache) else 0.0,
+                "probes": st.reprobes + (1 if d.probe_ms else 0),
+                "obs": st.obs,
+                "ewma_ms": st.ewma_ms,
+            },
         }
 
     # ----------------------------------------------------- finalization
@@ -262,6 +587,7 @@ class BatchScheduler:
                 for st in self._buckets.values():
                     if not self.cache.contains(st.key):
                         self.cache.put(st.key, self._bucket_entry(st, st.current()))
+                    self._push_stats(st)
             self.cache.flush()
         stats = self.stats()
         telemetry.emit_batch_event({"event": "finalize", **stats})
@@ -285,6 +611,12 @@ class BatchScheduler:
             "probe_budget_ms": self.probe_budget_ms,
             "decide_wall_ms": round(self._decide_wall_ms, 3),
             "pending_buckets": len(self.pending()),
+            # fleet sharing: buckets opened final from a (shared) cache,
+            # i.e. probes another process (or a previous run) paid for
+            "warm_cache_opens": self._warm_opens,
+            "drift_flags": self.drift_flags,
+            "drift_reprobes": self.drift_reprobes,
+            "drift_flips": self.drift_flips,
         }
 
     def bucket_stats(self) -> List[Dict[str, Any]]:
@@ -304,6 +636,14 @@ class BatchScheduler:
                     "probe_charge_ms": round(st.probe_charge_ms, 3),
                     "rep_n_rows": st.rep_feat.n_rows,
                     "rep_nnz": st.rep_feat.nnz,
+                    "obs": st.obs,
+                    "ewma_ms": None if st.ewma_ms is None else round(st.ewma_ms, 4),
+                    "probe_est_ms": (
+                        None if st.probe_est_ms is None else round(st.probe_est_ms, 4)
+                    ),
+                    "ref_ms": None if st.ref_ms is None else round(st.ref_ms, 4),
+                    "drift_flagged": st.drift_flagged,
+                    "reprobes": st.reprobes,
                 }
             )
         return rows

@@ -219,10 +219,16 @@ class ScheduleBucket:
         )
 
 
-def _waste_bin(waste: float) -> int:
-    """Monotone 3-level quantization of padding_waste."""
+def waste_bin(waste: float) -> int:
+    """Monotone 3-level quantization of padding_waste: 0 (< 0.5),
+    1 (< 0.75), 2 (>= 0.75). Public because the drift detector
+    (core/batch.py) compares live inputs' waste against the bin the
+    bucket was probed under."""
     if waste >= 0.75:
         return 2
     if waste >= 0.5:
         return 1
     return 0
+
+
+_waste_bin = waste_bin  # internal alias kept for older call sites

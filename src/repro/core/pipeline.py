@@ -42,6 +42,7 @@ from repro.core.scheduler import (
     Decision,
     ProbeOutcome,
     default_probe_args,
+    entry_with_stats,
 )
 from repro.kernels import ref
 from repro.kernels import xla as kx
@@ -116,7 +117,10 @@ def decide_attention(
         estimates_ms=estimates, stage_ms=stage_ms,
     )
     if sage.cache is not None:
-        sage.cache.put(key, decision.to_cache_entry())
+        # same v4 stats treatment as per-op decisions: the batch
+        # scheduler's drift detector tracks fused-vs-composed staleness
+        # per regime through these fields
+        sage.cache.put(key, entry_with_stats(decision, feat))
     telemetry.emit_attention_decision(decision)
     return decision
 

@@ -81,6 +81,23 @@ class Decision:
         }
 
 
+def entry_with_stats(decision: "Decision", feat: InputFeatures) -> Dict[str, Any]:
+    """Cache entry + schema-v4 running stats: the probe-measured cost of
+    the pinned choice and the probe-time padding regime are what the
+    drift detector (core/batch.py) compares live traffic against, and
+    `probed_at` is the fleet merge tiebreaker (last-probe-wins)."""
+    entry = decision.to_cache_entry()
+    probed = bool(decision.probe_ms)
+    entry["probed"] = probed
+    entry["stats"] = {
+        "probe_est_ms": decision.probe_ms.get(decision.choice),
+        "waste_at_probe": feat.padding_waste,
+        "probed_at": time.time() if probed else 0.0,
+        "probes": 1 if probed else 0,
+    }
+    return entry
+
+
 class AutoSage:
     """Holds the cache + hardware spec; one instance per process."""
 
@@ -253,7 +270,7 @@ class AutoSage:
             probe_iter_ms=outcome.iter_ms, estimates_ms=estimates,
         )
         if self.cache is not None:
-            self.cache.put(key, decision.to_cache_entry())
+            self.cache.put(key, entry_with_stats(decision, feat))
         telemetry.emit_decide_event(decision, feat)
         return decision
 

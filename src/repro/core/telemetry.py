@@ -1,11 +1,20 @@
 """CSV + JSON telemetry (paper §10: every CSV gets a .meta.json sidecar
-with device, software versions, and the AUTOSAGE_* env snapshot)."""
+with device, software versions, and the AUTOSAGE_* env snapshot).
+
+JSONL streams are multi-process safe: each stream keeps ONE unbuffered
+O_APPEND handle per process (not an open/append/close per event), and
+every record lands as a single write() of one full line — POSIX appends
+at this size are atomic, so N worker processes interleave whole records,
+never partial lines (the fleet harness tails decide_events.jsonl live).
+"""
 from __future__ import annotations
 
+import atexit
 import csv
 import json
 import os
 import platform
+import threading
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
@@ -35,14 +44,50 @@ def write_csv(path: str, header: Sequence[str], rows: List[Sequence]) -> None:
         json.dump(_meta(), f, indent=1)
 
 
+# one appending handle per stream path, opened lazily and reused for the
+# process lifetime (an open/close per event costs ~3 syscalls/event and
+# lets a buffered writer split a record across appends from two workers)
+_handles: Dict[str, object] = {}
+_handles_lock = threading.Lock()
+
+
+def _handle(path: str):
+    p = str(Path(path))
+    with _handles_lock:
+        f = _handles.get(p)
+        if f is None or f.closed:
+            Path(p).parent.mkdir(parents=True, exist_ok=True)
+            # binary + unbuffered: each write() below is exactly one
+            # O_APPEND syscall carrying one complete line
+            f = open(p, "ab", buffering=0)
+            _handles[p] = f
+        return f
+
+
+def close_streams() -> None:
+    """Close every cached JSONL handle (tests that rotate
+    AUTOSAGE_TELEMETRY_DIR between cases, and process exit)."""
+    with _handles_lock:
+        for f in _handles.values():
+            try:
+                f.close()
+            except OSError:
+                pass
+        _handles.clear()
+
+
+atexit.register(close_streams)
+
+
 def append_jsonl(path: str, record: Dict) -> None:
     """Append one JSON record (tagged with the device signature) to a
-    .jsonl stream; creates parent dirs on first write."""
-    p = Path(path)
-    p.parent.mkdir(parents=True, exist_ok=True)
-    with open(p, "a") as f:
-        json.dump({"device_sig": device_sig(), **record}, f, sort_keys=True)
-        f.write("\n")
+    .jsonl stream; creates parent dirs on first write. The record is
+    serialized first and written with a single write() so concurrent
+    writer processes cannot interleave partial lines."""
+    line = json.dumps(
+        {"device_sig": device_sig(), **record}, sort_keys=True
+    ) + "\n"
+    _handle(path).write(line.encode())
 
 
 def emit_batch_event(event: Dict) -> Optional[str]:

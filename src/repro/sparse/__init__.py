@@ -13,6 +13,7 @@ from repro.sparse.generators import (
     power_law,
     reddit_like,
     products_like,
+    regime_shift_stream,
     sample_subgraph_stream,
     sliding_window_csr,
 )
@@ -32,6 +33,7 @@ __all__ = [
     "power_law",
     "reddit_like",
     "products_like",
+    "regime_shift_stream",
     "sample_subgraph_stream",
     "sliding_window_csr",
 ]

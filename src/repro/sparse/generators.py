@@ -165,6 +165,51 @@ def sample_subgraph_stream(
     return out
 
 
+def regime_shift_stream(
+    n_graphs: int,
+    rows_per_graph: int,
+    n: int = 2048,
+    alpha_lo: float = 0.0,
+    alpha_hi: float = 1.6,
+    avg_deg: float = 8.0,
+    shift_at: float = 0.5,
+    seed: int = 0,
+) -> List[CSR]:
+    """Minibatch stream whose *input regime drifts mid-stream*: subgraphs
+    are sampled from power-law parents whose alpha ramps from
+    ``alpha_lo`` to ``alpha_hi`` across the second half of the stream
+    (the first ``shift_at`` fraction is stationary at ``alpha_lo``).
+
+    This is the stale-decision workload of Dai et al. ("Heuristic
+    Adaptability to Input Dynamics for SpMM on GPUs"): a scheduler that
+    pins per-bucket decisions from the early stationary phase keeps
+    serving them while the degree distribution underneath heavies up —
+    the drift detector in core/batch.py exists to catch exactly this.
+    Consecutive graphs share a parent in pairs so the stream still has
+    the sampled-subgraph character (distinct row subsets per graph).
+    """
+    rng = np.random.default_rng(seed)
+    out: List[CSR] = []
+    n_stationary = int(n_graphs * shift_at)
+    for i in range(n_graphs):
+        if i < n_stationary:
+            alpha = alpha_lo
+        else:
+            ramp = (i - n_stationary) / max(n_graphs - n_stationary - 1, 1)
+            alpha = alpha_lo + (alpha_hi - alpha_lo) * ramp
+        # one parent per consecutive pair: sampled subsets differ, the
+        # regime moves only with alpha
+        parent = power_law(
+            n, alpha, avg_deg=avg_deg, seed=seed + 1000 + (i // 2)
+        )
+        rows = np.sort(
+            rng.choice(parent.n_rows, size=min(rows_per_graph, parent.n_rows),
+                       replace=False)
+        )
+        out.append(parent.row_slice(rows))
+    return out
+
+
 def sliding_window_csr(
     n_q: int, n_k: int, window: int, n_global: int = 0, causal: bool = True
 ) -> CSR:

@@ -1,0 +1,153 @@
+"""Scheduler conformance: ONE invariant suite over every scheduler
+surface x every op.
+
+Until now these invariants were spot-checked per scheduler in separate
+files (test_scheduler / test_batch / test_attention_pipeline); any new
+scheduler surface could silently skip one. This suite parametrizes
+{AutoSage, BatchScheduler, shared-cache BatchScheduler} x {spmm, sddmm,
+attention} over the contracts every scheduler must honor:
+
+  1. decide -> build_runner -> run equals the kernels/ref.py oracle;
+  2. guardrail fallback safety: a rejected probe falls back to the
+     baseline, alpha <= 1, and an accepted challenger actually beat
+     alpha * t_baseline on the probe;
+  3. the returned decision is always runnable (choice resolves to a
+     variant, outputs finite);
+  4. re-deciding the same input is deterministic (cache / bucket hit,
+     no second probe).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AutoSage, BatchScheduler, ScheduleCache
+from repro.kernels import ref
+from repro.sparse import hub_skew
+
+OPS = ("spmm", "sddmm", "attention")
+SCHEDULERS = ("autosage", "batch", "batch-shared")
+
+
+def _graph(seed=0):
+    # dedup'd so the fused-attention gate stays open; hub-skewed so the
+    # candidate pool is non-trivial for every op
+    return hub_skew(800, 4, 0.05, 24, seed=seed).dedup_edges()
+
+
+def _make_scheduler(kind: str, tmp_path):
+    sage = AutoSage(
+        cache=ScheduleCache(path=None), probe_iters=1, probe_cap_ms=25,
+        probe_frac=0.25,
+    )
+    if kind == "autosage":
+        return sage
+    if kind == "batch":
+        return BatchScheduler(sage, probe_budget_ms=10_000)
+    if kind == "batch-shared":
+        shared = AutoSage(
+            cache=ScheduleCache(path=str(tmp_path / "shared.json"), shared=True),
+            probe_iters=1, probe_cap_ms=25, probe_frac=0.25,
+        )
+        return BatchScheduler(shared, probe_budget_ms=10_000)
+    raise KeyError(kind)
+
+
+def _run_op(sched, csr, op, f, rng):
+    """Dispatch through the scheduler's public convenience surface;
+    returns (out, decision, oracle)."""
+    rowptr, colind = jnp.asarray(csr.rowptr), jnp.asarray(csr.colind)
+    if op == "spmm":
+        b = jnp.asarray(rng.standard_normal((csr.n_cols, f)).astype(np.float32))
+        out, d = sched.spmm(csr, b)
+        oracle = ref.spmm_ref(rowptr, colind, None, b)
+    elif op == "sddmm":
+        x = jnp.asarray(rng.standard_normal((csr.n_rows, f)).astype(np.float32))
+        y = jnp.asarray(rng.standard_normal((csr.n_cols, f)).astype(np.float32))
+        out, d = sched.sddmm(csr, x, y)
+        oracle = ref.sddmm_ref(rowptr, colind, x, y)
+    elif op == "attention":
+        q = jnp.asarray(rng.standard_normal((csr.n_rows, f)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((csr.n_cols, f)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((csr.n_cols, f)).astype(np.float32))
+        out, d = sched.attention(csr, q, k, v)
+        oracle = ref.csr_attention_ref(rowptr, colind, q, k, v)
+    else:
+        raise KeyError(op)
+    return out, d, oracle
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("kind", SCHEDULERS)
+def test_decide_run_matches_oracle(kind, op, tmp_path):
+    """Whatever variant any scheduler picks, the scheduled result must
+    equal the reference oracle — scheduling choices may change speed,
+    never values."""
+    sched = _make_scheduler(kind, tmp_path)
+    rng = np.random.default_rng(0)
+    out, d, oracle = _run_op(sched, _graph(), op, 16, rng)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(oracle), rtol=5e-3, atol=5e-3,
+        err_msg=f"{kind}/{op} chose {d.choice}",
+    )
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("kind", SCHEDULERS)
+def test_guardrail_fallback_safety(kind, op, tmp_path):
+    """Prop. 1 everywhere: alpha <= 1; a rejected probe serves exactly
+    the baseline variant; an accepted challenger beat alpha*t_baseline
+    on the probe distribution."""
+    sched = _make_scheduler(kind, tmp_path)
+    rng = np.random.default_rng(1)
+    _, d, _ = _run_op(sched, _graph(seed=1), op, 16, rng)
+    gr = d.guardrail
+    if gr is None:
+        # cached or provisional decision: no probe ran in this process
+        assert d.from_cache or d.choice == "baseline"
+        return
+    assert gr.alpha <= 1.0
+    if gr.accepted:
+        assert d.choice == gr.choice != "baseline"
+        assert gr.t_best_ms <= gr.alpha * gr.t_baseline_ms
+        assert gr.speedup >= 1.0 / gr.alpha - 1e-9
+    else:
+        assert d.choice == "baseline"
+        assert d.variant.is_baseline
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("kind", SCHEDULERS)
+def test_redecide_is_deterministic_and_probe_free(kind, op, tmp_path):
+    """Second decide on the same input: same choice, zero extra probes
+    (exact-key cache hit for AutoSage, bucket hit for BatchScheduler)."""
+    sched = _make_scheduler(kind, tmp_path)
+    rng = np.random.default_rng(2)
+    csr = _graph(seed=2)
+    _, d1, _ = _run_op(sched, csr, op, 16, rng)
+    if isinstance(sched, BatchScheduler):
+        probes_after_first = sched.stats()["probes_run"]
+    _, d2, _ = _run_op(sched, csr, op, 16, rng)
+    assert d2.choice == d1.choice
+    if isinstance(sched, BatchScheduler):
+        assert sched.stats()["probes_run"] == probes_after_first
+    else:
+        assert d2.from_cache and not d2.probe_ms
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_zero_budget_batch_serves_runnable_baseline(op, tmp_path):
+    """BatchScheduler with no probe budget must still serve correct,
+    runnable decisions (the guardrail fallback), for every op."""
+    bs = BatchScheduler(
+        AutoSage(cache=ScheduleCache(path=None), probe_iters=1,
+                 probe_cap_ms=25, probe_frac=0.25),
+        probe_budget_ms=0.0,
+    )
+    rng = np.random.default_rng(3)
+    out, d, oracle = _run_op(bs, _graph(seed=3), op, 16, rng)
+    assert d.choice == "baseline"
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(oracle), rtol=5e-3, atol=5e-3
+    )
+    assert bs.stats()["probes_run"] == 0

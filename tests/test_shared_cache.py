@@ -1,0 +1,328 @@
+"""Fleet-shared schedule cache: merge-on-flush concurrency across real
+processes, lockfile contention/timeout/stale-holder recovery, v3->v4
+migration, and bit-identical replay from a merged cache."""
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core import (
+    AutoSage,
+    BatchScheduler,
+    CacheLockTimeout,
+    ScheduleCache,
+)
+from repro.core.cache import SCHEMA_VERSION, default_stats
+from repro.sparse import fixed_degree, hub_skew, sample_subgraph_stream
+
+# how many concurrent writer processes the concurrency test spawns
+# (CI pins this to its runner shape; 2 is the documented fleet minimum)
+N_WORKERS = max(2, int(os.environ.get("AUTOSAGE_TEST_WORKERS", "3")))
+
+_SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+# each worker writes 5 private keys plus hits on one contended key, all
+# flushed through the merge-on-flush path while its peers do the same
+_WORKER_SCRIPT = """
+import sys
+from repro.core.cache import ScheduleCache
+wid, path = int(sys.argv[1]), sys.argv[2]
+c = ScheduleCache(path=path, shared=True)
+with c:
+    for i in range(5):
+        c.put(f"w{wid}-k{i}", {"choice": f"v{wid}",
+                               "stats": {"probed_at": 1.0 + wid}})
+    c.put("common", {"choice": f"w{wid}", "stats": {"probed_at": 1.0 + wid}})
+    c.add_hits("common", 3)
+c.flush()
+"""
+
+
+def _spawn_worker(wid: int, path: str) -> subprocess.Popen:
+    env = {**os.environ, "PYTHONPATH": _SRC}
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env.pop("AUTOSAGE_REPLAY_ONLY", None)
+    env.pop("AUTOSAGE_CACHE_SHARED", None)
+    return subprocess.Popen(
+        [sys.executable, "-c", _WORKER_SCRIPT, str(wid), path],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+    )
+
+
+def test_concurrent_merge_loses_no_entries(tmp_path):
+    """N real processes flush into one shared cache concurrently: the
+    final file holds every process's keys (no lost update), the
+    contended key resolves last-probe-wins, and its hit counts SUM."""
+    path = str(tmp_path / "shared.json")
+    procs = [_spawn_worker(w, path) for w in range(N_WORKERS)]
+    for p in procs:
+        out, err = p.communicate(timeout=180)
+        assert p.returncode == 0, err.decode()
+    data = json.load(open(path))
+    for w in range(N_WORKERS):
+        for i in range(5):
+            assert f"w{w}-k{i}" in data, sorted(data)
+    assert data["common"]["stats"]["hits"] == 3 * N_WORKERS
+    # last-probe-wins: the largest probed_at owns the decision
+    assert data["common"]["choice"] == f"w{N_WORKERS - 1}"
+    assert not os.path.exists(path + ".lock")
+
+
+def test_lock_contention_blocks_then_succeeds(tmp_path):
+    """A flush under a live held lock waits for the release instead of
+    clobbering (or timing out, given a sane timeout)."""
+    path = tmp_path / "c.json"
+    c = ScheduleCache(path=str(path), shared=True, lock_timeout_s=5.0)
+    lock = tmp_path / "c.json.lock"
+    lock.write_text(json.dumps({"pid": os.getpid(), "ts": time.time()}))
+    t = threading.Timer(0.3, lock.unlink)
+    t.start()
+    t0 = time.monotonic()
+    c.put("k", {"choice": "x"})  # eager flush: must wait for the release
+    assert time.monotonic() - t0 >= 0.25
+    t.join()
+    assert json.load(open(path))["k"]["choice"] == "x"
+    assert not lock.exists()
+
+
+def test_lock_timeout_raises_on_live_holder(tmp_path):
+    path = tmp_path / "c.json"
+    c = ScheduleCache(path=str(path), shared=True, lock_timeout_s=0.2)
+    lock = tmp_path / "c.json.lock"
+    # held by THIS live process and fresh: never stale, never released
+    lock.write_text(json.dumps({"pid": os.getpid(), "ts": time.time()}))
+    with pytest.raises(CacheLockTimeout):
+        c.put("k", {"choice": "x"})
+    lock.unlink()
+    c.flush()  # the cache stays usable once the lock clears
+    assert json.load(open(path))["k"]["choice"] == "x"
+
+
+def test_stale_lock_dead_holder_recovered(tmp_path):
+    """A crashed holder (dead pid) must not brick the fleet."""
+    path = tmp_path / "c.json"
+    lock = tmp_path / "c.json.lock"
+    lock.write_text(json.dumps({"pid": 2**22 + 12345, "ts": time.time()}))
+    c = ScheduleCache(path=str(path), shared=True, lock_timeout_s=2.0)
+    c.put("k", {"choice": "x"})
+    assert json.load(open(path))["k"]["choice"] == "x"
+    assert not lock.exists()
+
+
+def test_stale_lock_old_mtime_recovered(tmp_path):
+    """A wedged live holder is evicted once the lock outlives the stale
+    horizon (pid-recycling safe: age alone is sufficient)."""
+    path = tmp_path / "c.json"
+    lock = tmp_path / "c.json.lock"
+    lock.write_text(json.dumps({"pid": os.getpid(), "ts": time.time() - 999}))
+    old = time.time() - 999
+    os.utime(lock, (old, old))
+    c = ScheduleCache(path=str(path), shared=True,
+                      lock_timeout_s=2.0, lock_stale_s=30.0)
+    c.put("k", {"choice": "x"})
+    assert json.load(open(path))["k"]["choice"] == "x"
+
+
+def test_hit_count_sum_across_cache_objects(tmp_path):
+    """Hit deltas merge additively: two processes' traffic on one entry
+    accumulates instead of the last flush clobbering the count."""
+    path = str(tmp_path / "c.json")
+    a = ScheduleCache(path=path, shared=True)
+    a.put("k", {"choice": "x", "stats": {"probed_at": 5.0}})
+    a.flush()
+    b = ScheduleCache(path=path, shared=True)  # loads k (hits=0)
+    a.add_hits("k", 4)
+    b.add_hits("k", 2)
+    a.flush()
+    b.flush()
+    final = ScheduleCache(path=path, shared=True)
+    assert final.stats("k")["hits"] == 6
+    # re-flushing without new traffic must not double-count
+    b.put("other", {"choice": "y"})
+    assert ScheduleCache(path=path).stats("k")["hits"] == 6
+
+
+def test_release_lock_requires_ownership(tmp_path):
+    """A holder evicted by the staleness horizon must not unlink the
+    lock a peer has since re-acquired (that would admit a third writer
+    into the merge transaction)."""
+    path = tmp_path / "c.json"
+    c = ScheduleCache(path=str(path), shared=True)
+    lock = tmp_path / "c.json.lock"
+    lock.write_text(json.dumps({"pid": os.getpid() + 1, "ts": time.time()}))
+    c._release_lock(lock)  # not ours: must survive
+    assert lock.exists()
+    lock.write_text(json.dumps({"pid": os.getpid(), "ts": time.time()}))
+    c._release_lock(lock)  # ours: released
+    assert not lock.exists()
+
+
+def test_warm_open_reprobes_unconstructible_peer_choice(tmp_path):
+    """A peer's pinned choice this process cannot build (e.g. probed
+    under AUTOSAGE_PROBE_PALLAS) must trigger an honest fresh probe, not
+    silently run baseline while reporting the peer's choice — except in
+    replay mode, where the pinned name is served as-is (degrading to the
+    baseline variant)."""
+    from repro.core import BatchScheduler, device_sig
+
+    path = str(tmp_path / "c.json")
+    parent = fixed_degree(2048, 12, seed=1)
+    stream = sample_subgraph_stream([parent], 4, rows_per_graph=256, seed=2)
+    bs = BatchScheduler(_tiny_sage(path, shared=True), probe_budget_ms=10_000)
+    key = ScheduleCache.bucket_key(
+        device_sig(), bs.bucket_of(stream[0], 16, "spmm").sig(), 16, "spmm",
+        bs.sage.alpha,
+    )
+    bs.cache.put(key, {
+        "choice": "imaginary_pallas[xy=1]", "probed": True, "op": "spmm",
+        "stats": {"probed_at": 123.0, "probes": 1},
+    })
+    d = bs.decide(stream[0], 16, "spmm")
+    assert d.choice != "imaginary_pallas[xy=1]"
+    assert bs.stats()["probes_run"] == 1  # re-pinned by a real probe
+    assert bs.stats()["warm_cache_opens"] == 0
+
+    # replay: the recorded name is served verbatim (replay is immutable)
+    bs.cache.flush()
+    rbs = BatchScheduler(AutoSage(cache=ScheduleCache(path=path, replay_only=True)))
+    d = rbs.decide(stream[1], 16, "spmm")
+    assert d.from_cache
+
+
+def test_v3_cache_migrates_to_v4_roundtrip(tmp_path):
+    """A schema-v3 file (no stats) loads, serves, accepts v4 writes, and
+    round-trips: old entries keep their decision payload and gain default
+    stats; replay-only mode serves them unchanged."""
+    path = tmp_path / "old.json"
+    v3 = {
+        "cpu:x:jax1|deadbeef|F=32|spmm|a=0.95": {
+            "schema": 3, "choice": "row_ell", "probe_ms": {"baseline": 2.0},
+        },
+        "bucket|cpu:x:jax1|r9.z12.s0.d-3.w0.simple|F=32|spmm|a=0.95": {
+            "schema": 3, "choice": "hub_split_ell[hub_threshold=24]",
+        },
+    }
+    path.write_text(json.dumps(v3))
+    c = ScheduleCache(path=str(path))
+    for key, old in v3.items():
+        entry = c.get(key)
+        assert entry["choice"] == old["choice"]
+        for field in default_stats():
+            assert field in entry["stats"]
+    c.put("new", {"choice": "dense"})  # v4 write alongside migrated entries
+    reloaded = json.load(open(path))
+    assert reloaded["new"]["schema"] == SCHEMA_VERSION
+    for key, old in v3.items():
+        assert reloaded[key]["choice"] == old["choice"]
+    replay = ScheduleCache(path=str(path), replay_only=True)
+    for key, old in v3.items():
+        assert replay.get(key)["choice"] == old["choice"]
+
+
+def _tiny_sage(path=None, shared=False):
+    return AutoSage(
+        cache=ScheduleCache(path=path, shared=shared), probe_iters=1,
+        probe_cap_ms=25, probe_frac=0.25,
+    )
+
+
+def test_replay_bit_identical_from_merged_cache(tmp_path):
+    """Two schedulers (separate cache objects, one shared file) each pin
+    half the regimes; a replay-only scheduler serves BOTH halves from the
+    merged file, twice, bit-identically, without a single probe."""
+    path = str(tmp_path / "merged.json")
+    parents_a = [fixed_degree(2048, 3, seed=0), fixed_degree(2048, 12, seed=1)]
+    parents_b = [fixed_degree(2048, 48, seed=2), hub_skew(2048, 6, 0.10, 60, seed=3)]
+    stream_a = sample_subgraph_stream(parents_a, 8, rows_per_graph=256, seed=4)
+    stream_b = sample_subgraph_stream(parents_b, 8, rows_per_graph=256, seed=5)
+    for stream in (stream_a, stream_b):
+        with BatchScheduler(_tiny_sage(path, shared=True),
+                            probe_budget_ms=10_000) as bs:
+            for g in stream:
+                bs.decide(g, 16, "spmm")
+
+    def replay():
+        rbs = BatchScheduler(
+            AutoSage(cache=ScheduleCache(path=path, replay_only=True))
+        )
+        out = [rbs.decide(g, 16, "spmm").choice for g in stream_a + stream_b]
+        assert rbs.stats()["probes_run"] == 0
+        return out
+
+    c1, c2 = replay(), replay()
+    assert c1 == c2
+    merged = json.load(open(path))
+    bucket_choices = {
+        v["bucket"]: v["choice"] for v in merged.values()
+        if isinstance(v, dict) and "bucket" in v
+    }
+    rbs = BatchScheduler(AutoSage(cache=ScheduleCache(path=path, replay_only=True)))
+    for g in stream_a + stream_b:
+        d = rbs.decide(g, 16, "spmm")
+        sig = rbs.bucket_of(g, 16, "spmm").sig()
+        assert d.choice == bucket_choices[sig]
+
+
+_TELEMETRY_SCRIPT = """
+import os, sys
+os.environ["AUTOSAGE_TELEMETRY_DIR"] = sys.argv[2]
+from repro.core import telemetry
+wid = sys.argv[1]
+for i in range(200):
+    telemetry.append_jsonl(
+        os.path.join(sys.argv[2], "decide_events.jsonl"),
+        {"kind": "probe", "worker": wid, "i": i, "pad": "x" * 200},
+    )
+telemetry.close_streams()
+"""
+
+
+def test_jsonl_appends_never_interleave_across_processes(tmp_path):
+    """N processes hammering one decide_events.jsonl: every line must
+    parse as a complete JSON record (single-write appends through one
+    unbuffered handle per stream), and none may be lost."""
+    out_dir = str(tmp_path / "tele")
+    env = {**os.environ, "PYTHONPATH": _SRC}
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", _TELEMETRY_SCRIPT, str(w), out_dir],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        )
+        for w in range(N_WORKERS)
+    ]
+    for p in procs:
+        _, err = p.communicate(timeout=180)
+        assert p.returncode == 0, err.decode()
+    lines = Path(out_dir, "decide_events.jsonl").read_text().splitlines()
+    assert len(lines) == 200 * N_WORKERS
+    seen = set()
+    for line in lines:
+        rec = json.loads(line)  # raises on any torn/interleaved write
+        seen.add((rec["worker"], rec["i"]))
+    assert len(seen) == 200 * N_WORKERS
+
+
+def test_shared_cache_warm_opens_avoid_probes(tmp_path):
+    """The fleet dividend, in-process: a second scheduler over the same
+    traffic opens every bucket warm from the first one's flush."""
+    path = str(tmp_path / "warm.json")
+    parents = [fixed_degree(2048, 12, seed=1), fixed_degree(2048, 48, seed=2)]
+    stream = sample_subgraph_stream(parents, 8, rows_per_graph=256, seed=3)
+    with BatchScheduler(_tiny_sage(path, shared=True),
+                        probe_budget_ms=10_000) as bs1:
+        for g in stream:
+            bs1.decide(g, 16, "spmm")
+    assert bs1.stats()["probes_run"] >= 1
+    with BatchScheduler(_tiny_sage(path, shared=True),
+                        probe_budget_ms=10_000) as bs2:
+        for g in sample_subgraph_stream(parents, 8, rows_per_graph=256, seed=9):
+            bs2.decide(g, 16, "spmm")
+    s2 = bs2.stats()
+    assert s2["probes_run"] == 0
+    assert s2["warm_cache_opens"] == s2["buckets"]
