@@ -550,12 +550,15 @@ def skew_smoke(full: bool = False) -> List[Tuple]:
 # ------------------------------------------------ fleet / shared cache
 def _run_shared_worker(
     cache: str, shared: bool, seed: int, n_graphs: int = 32,
-    replay: bool = False,
+    replay: bool = False, device_sig: Optional[str] = None,
+    hw_profile: Optional[str] = None, regimes: int = 4,
+    no_transfer: bool = False,
 ) -> Dict:
     """One subprocess trainer (benchmarks/shared_worker.py); returns its
     stats JSON. Every worker (including replay) runs under the same
     pinned backend, so device_sig cache keys always line up — and a
-    child never probes accelerator metadata."""
+    child never probes accelerator metadata. ``device_sig``/``hw_profile``
+    simulate a device class (heterogeneous-fleet portability runs)."""
     import json
     import os
     import subprocess
@@ -567,14 +570,28 @@ def _run_shared_worker(
         sys.executable, "-m", "benchmarks.shared_worker",
         "--cache", cache, "--n-graphs", str(n_graphs), "--rows", "256",
         "--seed", str(seed), "--budget-ms", "10000",
+        "--regimes", str(regimes),
     ]
     if shared:
         cmd.append("--shared")
     if replay:
         cmd.append("--replay")
+    if device_sig:
+        cmd += ["--device-sig", device_sig]
+    if hw_profile:
+        cmd += ["--hw-profile", hw_profile]
+    if no_transfer:
+        cmd.append("--no-transfer")
     env = {**os.environ}
     env.setdefault("JAX_PLATFORMS", "cpu")
-    env.pop("AUTOSAGE_REPLAY_ONLY", None)
+    # ambient scheduler knobs must not leak into the measured workers:
+    # the flags above are the only configuration a worker runs under
+    for knob in (
+        "AUTOSAGE_REPLAY_ONLY", "AUTOSAGE_DEVICE_SIG_OVERRIDE",
+        "AUTOSAGE_HW_PROFILE", "AUTOSAGE_TRANSFER",
+        "AUTOSAGE_TRANSFER_MARGIN",
+    ):
+        env.pop(knob, None)
     out = subprocess.run(
         cmd, capture_output=True, text=True, cwd=str(repo), env=env,
         check=True, timeout=600,
@@ -727,6 +744,208 @@ def shared_smoke(full: bool = False) -> List[Tuple]:
     return rows
 
 
+# ------------------------------------------- cross-device portability
+# Two device classes simulated on one box: distinct device signatures
+# (AUTOSAGE_DEVICE_SIG_OVERRIDE) paired with distinct roofline profiles
+# (AUTOSAGE_HW_PROFILE) — the "CPU probe box feeds the trainer fleet"
+# topology from the ROADMAP, runnable (and CI-gated) without a second
+# machine.
+_PORTABILITY_A = ("sim-probe-box", "cpu")
+_PORTABILITY_B = ("sim-trainer", "cpu_wide")
+
+PORTABILITY_FLOOR_PATH = "benchmarks/portability_floor.json"
+BENCH_PORTABILITY_JSON = f"{OUT}/BENCH_portability.json"
+
+
+def _portability_floor() -> Dict:
+    """The checked-in regression floor for the portability metrics (the
+    perf-trajectory gate: CI fails when a PR pushes transfer quality
+    below it)."""
+    import json
+    from pathlib import Path
+
+    path = Path(__file__).resolve().parent / "portability_floor.json"
+    return json.load(open(path))
+
+
+def _portability_run(n_graphs: int) -> Dict:
+    """Warm device A over the 8-regime stream, then run device B three
+    ways — cold (its own local probes: the oracle), warm off A's cache
+    (the transfer tier), and replay-only twice — and distill the
+    portability metrics."""
+    import json as _json
+    import tempfile
+
+    sig_a, hw_a = _PORTABILITY_A
+    sig_b, hw_b = _PORTABILITY_B
+    with tempfile.TemporaryDirectory() as tmp:
+        peer = f"{tmp}/peer.json"
+        a = _run_shared_worker(
+            peer, shared=True, seed=0, n_graphs=n_graphs, regimes=8,
+            device_sig=sig_a, hw_profile=hw_a,
+        )
+        # the local-probe oracle: transfer disabled outright, so the
+        # cold leg stays an honest baseline even if it ever runs
+        # against a warm cache
+        cold = _run_shared_worker(
+            f"{tmp}/cold.json", shared=True, seed=1, n_graphs=n_graphs,
+            regimes=8, device_sig=sig_b, hw_profile=hw_b, no_transfer=True,
+        )
+        warm = _run_shared_worker(
+            peer, shared=True, seed=1, n_graphs=n_graphs, regimes=8,
+            device_sig=sig_b, hw_profile=hw_b,
+        )
+        # replay B's stream twice from the merged cache: transferred
+        # decisions must replay bit-identically, probe-free
+        r1 = _run_shared_worker(
+            peer, shared=False, seed=1, n_graphs=n_graphs, regimes=8,
+            replay=True, device_sig=sig_b, hw_profile=hw_b,
+        )
+        r2 = _run_shared_worker(
+            peer, shared=False, seed=1, n_graphs=n_graphs, regimes=8,
+            replay=True, device_sig=sig_b, hw_profile=hw_b,
+        )
+        merged = _json.load(open(peer))
+
+    ws, cs = warm["stats"], cold["stats"]
+    shared_buckets = set(warm["bucket_choices"]) & set(cold["bucket_choices"])
+    agree = sum(
+        1 for b in shared_buckets
+        if warm["bucket_choices"][b] == cold["bucket_choices"][b]
+    )
+    transfers = ws["transfers"]
+    resolved = ws["transfers_confirmed"] + ws["transfers_flipped"]
+    return {
+        "n_graphs": n_graphs,
+        "buckets": ws["buckets"],
+        "peer_probes": a["stats"]["probes_run"],
+        "cold_probes": cs["probes_run"],
+        "warm_probes": ws["probes_run"],
+        "probes_avoided": cs["probes_run"] - ws["probes_run"],
+        "transfers": transfers,
+        "transfers_confirmed": ws["transfers_confirmed"],
+        "transfers_flipped": ws["transfers_flipped"],
+        "transfers_pending": ws["transfers_pending"],
+        "transfer_probe_free": ws["transfer_probe_free"],
+        # of the regimes device B had to decide with challengers (its
+        # cold probes), how many were served by transfer instead
+        "transfer_accept_rate": round(
+            transfers / max(cs["probes_run"], 1), 4
+        ),
+        "confirm_rate": round(
+            ws["transfers_confirmed"] / max(resolved, 1), 4
+        ),
+        "top1_agreement": round(agree / max(len(shared_buckets), 1), 4),
+        "replay_identical": r1["trace_choices"] == r2["trace_choices"],
+        "replay_probes": r1["stats"]["probes_run"],
+        "_warm": warm,
+        "_cold": cold,
+        "_replay": r1,
+        "_merged": merged,
+    }
+
+
+def _write_portability_bench(metrics: Dict) -> None:
+    """BENCH_portability.json: the machine-readable perf-trajectory
+    artifact CI uploads nightly and gates the smoke lane on."""
+    import json
+    from pathlib import Path
+
+    Path(OUT).mkdir(parents=True, exist_ok=True)
+    payload = {k: v for k, v in metrics.items() if not k.startswith("_")}
+    payload["floor"] = _portability_floor()
+    with open(BENCH_PORTABILITY_JSON, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+
+
+def portability(full: bool = False) -> List[Tuple]:
+    """Cross-device schedule portability: a probe-box device class warms
+    the cache over the 8-regime stream; a second device class (different
+    signature AND roofline) then serves the same regimes through the
+    estimate-space transfer tier. Reports probes avoided vs its own cold
+    start, the transfer-accept rate, confirm-vs-flip split, and top-1
+    agreement of transferred choices with the local-probe oracle."""
+    m = _portability_run(64 if full else 32)
+    rows: List[Tuple] = [
+        ("peer_device", m["peer_probes"], "-", "-"),
+        ("cold_local", m["cold_probes"], "-", "-"),
+        ("transfer", m["warm_probes"], m["transfers"],
+         f"avoided={m['probes_avoided']}"),
+        ("verdicts", m["transfers_confirmed"], m["transfers_flipped"],
+         f"probe_free={m['transfer_probe_free']}"),
+        ("quality", m["transfer_accept_rate"], m["confirm_rate"],
+         f"top1_agreement={m['top1_agreement']}"),
+        ("replay", m["replay_probes"], "-",
+         f"identical={m['replay_identical']}"),
+    ]
+    for name, x, y, note in rows:
+        print(f"  [portability] {name:12s} {x!s:>8s} {y!s:>6s} {note}")
+    write_csv(
+        f"{OUT}/portability.csv",
+        ["metric", "value_a", "value_b", "note"], rows,
+    )
+    _write_portability_bench(m)
+    return rows
+
+
+def portability_smoke(full: bool = False) -> List[Tuple]:
+    """Seconds-fast portability check for CI, enforcing the acceptance
+    contract AND the checked-in perf floor: with a warm peer-device
+    cache, the second device class must finish the 8-regime stream with
+    strictly fewer probes than its own cold start, at least half of its
+    transfers must confirm without flipping, transferred decisions must
+    replay bit-identically (and probe-free) under AUTOSAGE_REPLAY_ONLY=1,
+    and transfer-accept rate / probes-avoided must not regress below
+    benchmarks/portability_floor.json."""
+    del full
+    m = _portability_run(24)
+    floor = _portability_floor()
+    # write the artifact BEFORE the gate: a failing floor check must
+    # still leave the measured metrics on disk for the CI upload
+    _write_portability_bench(m)
+
+    assert m["transfers"] >= 1, m
+    assert m["warm_probes"] < m["cold_probes"], (
+        "transfer must beat cold start strictly", m,
+    )
+    resolved = m["transfers_confirmed"] + m["transfers_flipped"]
+    assert 2 * m["transfers_confirmed"] >= resolved, (
+        ">= half of transfers must confirm without flipping", m,
+    )
+    # deterministic replay of transferred decisions, pinned to the cache
+    assert m["replay_identical"], m
+    assert m["replay_probes"] == 0, m
+    warm, replay, merged = m["_warm"], m["_replay"], m["_merged"]
+    assert replay["trace_choices"] == warm["trace_choices"], (
+        "replay must serve the transferred choices verbatim"
+    )
+    for key, choice in zip(replay["trace_keys"], replay["trace_choices"]):
+        assert choice == merged[key]["choice"], (key, choice)
+    # the checked-in perf-trajectory floor (first real regression gate)
+    assert m["transfer_accept_rate"] >= floor["transfer_accept_rate"], (
+        m["transfer_accept_rate"], floor,
+    )
+    assert m["probes_avoided"] >= floor["probes_avoided"], (
+        m["probes_avoided"], floor,
+    )
+    assert m["confirm_rate"] >= floor["confirm_rate"], (
+        m["confirm_rate"], floor,
+    )
+
+    rows = [
+        ("cold", m["cold_probes"], "-", "-"),
+        ("transfer", m["warm_probes"], m["transfers"],
+         m["transfers_confirmed"]),
+        ("replay", m["replay_probes"], "-", "-"),
+    ]
+    for mode, probes, transfers, confirmed in rows:
+        print(f"  [portability-smoke] {mode:9s} probes={probes} "
+              f"transfers={transfers} confirmed={confirmed}")
+    write_csv(f"{OUT}/portability_smoke.csv",
+              ["mode", "probes", "transfers", "confirmed"], rows)
+    return rows
+
+
 def smoke(full: bool = False) -> List[Tuple]:
     """Seconds-fast bit-rot check for CI (--smoke): one scheduled SpMM and
     one pipeline-level attention decision on tiny graphs, results checked
@@ -776,6 +995,7 @@ ALL_TABLES = {
     "batch_stream": batch_stream,
     "skew_stress": skew_stress,
     "shared_cache": shared_cache,
+    "portability": portability,
 }
 
 # run only via --smoke (CI) or --only <name>; not part of the default sweep
@@ -784,4 +1004,5 @@ SMOKE_TABLES = {
     "batch_smoke": batch_smoke,
     "skew_smoke": skew_smoke,
     "shared_smoke": shared_smoke,
+    "portability_smoke": portability_smoke,
 }

@@ -9,8 +9,10 @@ from repro.core.features import (
     InputFeatures,
     ScheduleBucket,
     device_sig,
+    features_from_neutral,
     waste_bin,
 )
+from repro.core.transfer import TransferPlan, best_plan, plan_transfer
 from repro.core.scheduler import AutoSage, Decision, ProbeOutcome
 from repro.core.cache import (
     CacheKey,
@@ -36,9 +38,13 @@ __all__ = [
     "ScheduleBucket",
     "ScheduleCache",
     "ReplayMiss",
+    "TransferPlan",
     "apply_guardrail",
     "GuardrailDecision",
+    "best_plan",
     "device_sig",
+    "features_from_neutral",
     "parse_key",
+    "plan_transfer",
     "waste_bin",
 ]

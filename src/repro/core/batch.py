@@ -42,6 +42,17 @@ running stats across processes: a fleet of trainers opens buckets warm
 from peers' probes (probes-avoided-by-sharing), merges traffic counts on
 flush, and the freshest re-probe of a drifted bucket wins fleet-wide.
 
+On a HETEROGENEOUS fleet the cache alone shares nothing (keys pin
+device_sig), so a third tier sits between warm-hit and cold-probe:
+**decision transfer** (core/transfer.py). A regime probed on another
+device class is re-ranked under the local roofline, calibrated by the
+peer's observed-vs-estimated residuals; confident transfers are final
+with zero probes, the rest serve the transferred choice while ONE
+confirm probe (charged to the normal budget) confirms or flips it.
+Transferred decisions pin into the cache with provenance
+(source_device, verdict, rank agreement) and replay deterministically
+under AUTOSAGE_REPLAY_ONLY=1 like any other pinned decision.
+
 Entry points mirror the per-graph scheduler (`decide` / `build_runner` /
 `spmm` / `sddmm` / `attention`), so model code written against `AutoSage`
 (e.g. models/gnn.py) takes a `BatchScheduler` unchanged.
@@ -55,6 +66,7 @@ import zlib
 from typing import Any, Callable, Dict, List, Optional, Union
 
 from repro.core import registry, telemetry
+from repro.core import transfer as transfer_mod
 from repro.core.cache import ScheduleCache
 from repro.core.features import (
     InputFeatures,
@@ -126,6 +138,11 @@ class _BucketState:
     # (probing the stale rep would just re-measure the old regime)
     last_csr: Optional[CSR] = None
     last_feat: Optional[InputFeatures] = None
+    # --- cross-device transfer state (core/transfer.py) ---
+    transferred: bool = False  # opened from a peer device's probed ranking
+    transfer_verdict: str = ""  # "confirmed" | "pending" | "flipped"
+    transfer_choice: Optional[str] = None  # the re-ranked winner served
+    transfer_info: Optional[Dict[str, Any]] = None  # provenance record
 
     def current(self) -> Decision:
         return self.decision if self.decision is not None else self.provisional
@@ -203,6 +220,11 @@ class BatchScheduler:
         self.drift_flags = 0
         self.drift_reprobes = 0
         self.drift_flips = 0
+        # cross-device transfer accounting (core/transfer.py)
+        self.transfers = 0  # buckets opened from a peer device's ranking
+        self.transfers_confirmed = 0  # probe-free accepts + probe-confirmed
+        self.transfers_flipped = 0  # confirm probe disagreed
+        self.transfer_probe_free = 0  # confident accepts (zero probes paid)
 
     # ---------------------------------------------------------- decide
     def decide(self, csr: CSR, f: int, op: str) -> Decision:
@@ -237,15 +259,26 @@ class BatchScheduler:
         if self.auto_pump and not self.cache.replay_only:
             self.pump(self.max_probes_per_decide)
         d = st.current()
-        source = (
-            "bucket-cache" if (st.probed and st.decision is not None
-                               and st.decision.from_cache)
-            else "probe" if st.probed
+        if st.probed and st.decision is not None and st.decision.from_cache:
+            source = "bucket-cache"
+        elif (
+            st.probed and st.decision is not None
+            and st.decision.transfer is not None and not st.decision.probe_ms
+        ):
+            # confident cross-device transfer: final without a local probe
+            source = "transfer"
+        elif st.probed:
+            source = "probe"
+        elif st.transferred and st.transfer_verdict == "pending":
+            # transferred choice serving while its confirm probe waits on
+            # the budget
+            source = "transfer-pending"
+        elif st.decision is not None:
             # flagged bucket awaiting its re-probe: still serves the last
             # pinned decision, not the provisional baseline
-            else "drift-pending" if st.decision is not None
-            else "provisional"
-        )
+            source = "drift-pending"
+        else:
+            source = "provisional"
         self._decide_wall_ms += (time.perf_counter() - t0) * 1e3
         self._record(st, d, source)
         return d
@@ -264,7 +297,11 @@ class BatchScheduler:
         # Two cached shapes must NOT be adopted as final outside replay:
         #  - a peer's never-probed provisional baseline ("probed": False,
         #    pinned by its finalize) — a worker WITH budget treats it as
-        #    pending and probes, and its probed_at > 0 wins the merge;
+        #    pending and probes, and its probed_at > 0 wins the merge.
+        #    Exception: a transferred entry whose verdict is "confirmed"
+        #    was accepted by the transfer policy (zero-probe by design)
+        #    and is served as final; a transfer still "pending" its
+        #    confirm probe is re-opened pending instead;
         #  - a choice this process cannot construct (peer probed under
         #    AUTOSAGE_PROBE_PALLAS or different gates) — silently running
         #    baseline while reporting the peer's choice would corrupt
@@ -272,10 +309,14 @@ class BatchScheduler:
         #    variant's reference. Probing fresh re-pins it honestly.
         # Replay mode still serves both as final (replay is immutable;
         # an unconstructible choice degrades to the baseline variant).
+        transfer_confirmed = (
+            isinstance(cached, dict)
+            and (cached.get("transfer") or {}).get("verdict") == "confirmed"
+        )
         cached_unusable = (
             cached is not None and not self.cache.replay_only
             and (
-                cached.get("probed") is False
+                (cached.get("probed") is False and not transfer_confirmed)
                 or cached["choice"] not in by_name
             )
         )
@@ -321,6 +362,59 @@ class BatchScheduler:
             # no applicable challengers: baseline is final, never probe
             st.probed = True
             st.decision = provisional
+            return st
+
+        # --- transfer tier: between warm-hit and cold-probe ------------
+        # No local entry, but a peer DEVICE CLASS may have probed this
+        # regime: re-rank its probed candidate set under the local
+        # roofline (calibrated by the peer's observed-vs-estimated
+        # residuals) and serve the winner instead of the blind baseline.
+        # Confident transfers are final (zero probes); the rest keep
+        # serving the transferred choice while one confirm probe waits
+        # on the normal budget.
+        if transfer_mod.enabled() and not self.cache.replay_only:
+            plan = transfer_mod.best_plan(
+                self.cache.peer_entries(key), feat, self.sage.hw, by_name,
+                base, self.sage.alpha,
+            )
+            if plan is not None:
+                verdict = "confirmed" if plan.confident else "pending"
+                d = Decision(
+                    op=feat.op, choice=plan.choice,
+                    variant=by_name.get(plan.choice, base),
+                    guardrail=plan.guardrail, from_cache=False, probe_ms={},
+                    probe_overhead_ms=0.0, probe_iter_ms=0.0,
+                    estimates_ms=estimates,
+                    transfer=plan.provenance(verdict),
+                )
+                st.decision = d
+                st.transferred = True
+                st.transfer_verdict = verdict
+                st.transfer_choice = plan.choice
+                st.transfer_info = d.transfer
+                # the padding regime the transfer was accepted under: the
+                # waste-drift detector fires off it like off a probe's
+                st.waste_at_probe = feat.padding_waste
+                self.transfers += 1
+                if plan.confident:
+                    st.probed = True  # final: the confirm probe is waived
+                    self.transfers_confirmed += 1
+                    self.transfer_probe_free += 1
+                telemetry.emit_batch_event(
+                    {
+                        "event": "transfer",
+                        "bucket": bucket.sig(),
+                        "op": feat.op,
+                        "f": feat.f,
+                        "choice": plan.choice,
+                        "source_device": plan.source_device,
+                        "verdict": verdict,
+                        "rank_agreement": plan.rank_agreement,
+                        "confident": plan.confident,
+                        "peer_choice": plan.peer_choice,
+                    }
+                )
+                telemetry.emit_decide_event(d, feat, kind="transfer")
         return st
 
     # ----------------------------------------------------------- probes
@@ -369,14 +463,36 @@ class BatchScheduler:
             # 0 until here — seed would repeat the original probe's)
             st.reprobes += 1
             self.drift_reprobes += 1
+        was_pending_transfer = (
+            st.transferred and st.transfer_verdict == "pending"
+        )
         seed = self._bucket_seed(st) + st.reprobes
         with self.cache:  # defer flushing: exact + bucket puts -> one write
+            # allow_transfer=False: this IS the measurement that confirms
+            # (or flips) a transferred choice and re-pins drifted buckets
+            # — an estimate-space shortcut here would be circular
             if st.rep_feat.op == "attention":
-                d = self.sage.decide_attention(st.rep_csr, st.rep_feat.f, seed=seed)
+                d = self.sage.decide_attention(
+                    st.rep_csr, st.rep_feat.f, seed=seed, allow_transfer=False
+                )
             else:
                 d = self.sage.decide(
-                    st.rep_csr, st.rep_feat.f, st.rep_feat.op, seed=seed
+                    st.rep_csr, st.rep_feat.f, st.rep_feat.op, seed=seed,
+                    allow_transfer=False,
                 )
+            if was_pending_transfer:
+                st.transfer_verdict = (
+                    "confirmed" if d.choice == st.transfer_choice else "flipped"
+                )
+                if st.transfer_verdict == "confirmed":
+                    self.transfers_confirmed += 1
+                else:
+                    self.transfers_flipped += 1
+                if st.transfer_info is not None:
+                    st.transfer_info = dict(
+                        st.transfer_info, verdict=st.transfer_verdict
+                    )
+                    d.transfer = st.transfer_info
             st.probed = True
             st.decision = d
             st.probe_est_ms = d.probe_ms.get(d.choice)
@@ -405,6 +521,12 @@ class BatchScheduler:
             "budget_spent_ms": self.probe_spent_ms,
             "budget_ms": self.probe_budget_ms,
         }
+        if was_pending_transfer:
+            event.update(
+                transfer_verdict=st.transfer_verdict,
+                transfer_choice=st.transfer_choice,
+                source_device=(st.transfer_info or {}).get("source_device"),
+            )
         if was_drift:
             event.update(
                 old_choice=old_choice, flipped=flipped, reason=st.drift_reason,
@@ -551,29 +673,48 @@ class BatchScheduler:
         return (self.seed * 2654435761 + zlib.crc32(st.key.encode())) % (2**31)
 
     def _bucket_entry(self, st: _BucketState, d: Decision) -> Dict[str, Any]:
-        return {
+        entry = {
             "choice": d.choice,
             "op": st.rep_feat.op,
             "bucket": st.bucket.sig(),
             "rep_graph_sig": st.rep_feat.graph_sig,
             "probe_ms": d.probe_ms,
             "estimates_ms": st.estimates_ms,
-            # probed=False marks a pinned-provisional baseline: peers and
-            # replays can tell "measured winner" from "budget never got
-            # here" (the latter has no probe_est_ms to drift against)
+            # probed=False marks a pinned-provisional baseline OR a
+            # zero-probe transfer: peers and replays can tell "measured
+            # winner" from "budget never got here" / "accepted in
+            # estimate space" (the transfer dict disambiguates the two)
             "probed": bool(d.probe_ms) or d.from_cache,
+            # the schema-v5 device-neutral half: what a peer device class
+            # needs to re-rank this decision under its own roofline.
+            # Empty ranking for never-probed entries — an unmeasured
+            # decision donates nothing (transfers must not chain)
+            "neutral": {
+                "features": st.rep_feat.to_neutral(),
+                "ranking": transfer_mod.build_ranking(
+                    d.probe_ms, st.estimates_ms or d.estimates_ms,
+                    st.base.full_name(),
+                ),
+                "op": st.rep_feat.op,
+                "f": st.rep_feat.f,
+                "waste_bin": st.bucket.waste_bin,
+            },
             "stats": {
                 "probe_est_ms": st.probe_est_ms,
                 "waste_at_probe": st.waste_at_probe,
                 # an exact-key revalidation counts as a fresh pin too —
-                # only never-probed provisional baselines stay at 0.0 and
-                # lose every merge against a measured peer entry
+                # only never-probed entries (provisional baselines and
+                # zero-probe transfers) stay at 0.0 and lose every merge
+                # against a measured peer entry
                 "probed_at": time.time() if (d.probe_ms or d.from_cache) else 0.0,
                 "probes": st.reprobes + (1 if d.probe_ms else 0),
                 "obs": st.obs,
                 "ewma_ms": st.ewma_ms,
             },
         }
+        if st.transfer_info is not None:
+            entry["transfer"] = dict(st.transfer_info)
+        return entry
 
     # ----------------------------------------------------- finalization
     def finalize(self) -> Dict[str, Any]:
@@ -617,6 +758,18 @@ class BatchScheduler:
             "drift_flags": self.drift_flags,
             "drift_reprobes": self.drift_reprobes,
             "drift_flips": self.drift_flips,
+            # cross-device transfers: buckets opened from a peer device
+            # class's probed ranking; confirmed = probe-free accepts +
+            # confirm probes that agreed; probe_free = probes avoided
+            # outright by confident transfers
+            "transfers": self.transfers,
+            "transfers_confirmed": self.transfers_confirmed,
+            "transfers_flipped": self.transfers_flipped,
+            "transfers_pending": (
+                self.transfers - self.transfers_confirmed
+                - self.transfers_flipped
+            ),
+            "transfer_probe_free": self.transfer_probe_free,
         }
 
     def bucket_stats(self) -> List[Dict[str, Any]]:
@@ -644,6 +797,11 @@ class BatchScheduler:
                     "ref_ms": None if st.ref_ms is None else round(st.ref_ms, 4),
                     "drift_flagged": st.drift_flagged,
                     "reprobes": st.reprobes,
+                    "transferred": st.transferred,
+                    "transfer_verdict": st.transfer_verdict or None,
+                    "transfer_source": (
+                        (st.transfer_info or {}).get("source_device")
+                    ),
                 }
             )
         return rows

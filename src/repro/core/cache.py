@@ -1,6 +1,6 @@
 """Persistent schedule cache with deterministic replay (paper §4.2, §10).
 
-Two key kinds live side by side (schema v4):
+Two key kinds live side by side (schema v5):
 
   exact   ``{device}|{graph_sig}|F={f}|{op}|a={alpha}`` — the paper's
           "(device, graph signature, F, op)" plus the guardrail alpha,
@@ -28,6 +28,13 @@ its last merge, so fleet-wide traffic accumulates instead of
 ping-ponging). A crashed lock holder is detected (dead pid, or lock
 older than AUTOSAGE_LOCK_STALE_S) and its lock broken; a *live* holder
 that outlasts AUTOSAGE_LOCK_TIMEOUT_S raises `CacheLockTimeout`.
+
+Heterogeneous fleets (schema v5): keys still pin the device signature,
+but every entry carries a device-neutral "neutral" part, and
+`peer_entries()` surfaces the same regime probed on *other* device
+classes — the donors for estimate-space decision transfer
+(core/transfer.py), which is how a CPU probe box warms a TPU trainer
+without the trainer probing from cold.
 """
 from __future__ import annotations
 
@@ -47,9 +54,18 @@ DEFAULT_PATH = os.environ.get("AUTOSAGE_CACHE", "autosage_cache.json")
 # 3 adds bucket-level entries ("bucket": <bucket_sig>) written by the
 # batch scheduler; 4 adds per-entry running "stats" (fleet traffic +
 # observed-runtime EWMA + probe provenance) and the shared merge-on-
-# flush protocol. Reads stay tolerant of every shape, so old caches
-# replay unchanged (v3 entries grow default stats on load).
-SCHEMA_VERSION = 4
+# flush protocol; 5 splits every entry into a device-neutral part (the
+# "neutral" dict: input features + the full probed candidate ranking
+# with slope-probe ms and estimate ms at probe time + op/F/waste_bin)
+# and a device-pinned part (the top-level "choice" plus the device sig
+# in the key), so a bucket probed on device A transfers to device B
+# (core/transfer.py re-ranks A's probed set under B's roofline); a
+# "transfer" dict records provenance (source_device, verdict,
+# rank_agreement) on entries that were transferred rather than probed.
+# Reads stay tolerant of every shape, so old caches replay unchanged
+# (v3/v4 entries grow default stats on load; transfer synthesizes a
+# ranking from v4 probe_ms/estimates_ms when "neutral" is absent).
+SCHEMA_VERSION = 5
 
 _BUCKET_PREFIX = "bucket"
 
@@ -269,6 +285,36 @@ class ScheduleCache:
         if not isinstance(entry, dict):
             return None
         return entry.get("stats")
+
+    def peer_entries(self, key: str) -> List[tuple]:
+        """Transfer donors for ``key``: entries with the same structured
+        key *modulo the device signature* — the same regime (exact graph
+        or schedule bucket), F, op, and alpha, probed/pinned on another
+        device class. Returns (key, entry) pairs, freshest probe first
+        (deterministic tie-break on the key string), so the caller's
+        re-rank uses the newest measurement of the regime. Never raises
+        in replay mode — it only reads entries that are present."""
+        ck = parse_key(key)
+        if ck is None:
+            return []
+        out: List[tuple] = []
+        for k, v in self._data.items():
+            if k == key or not isinstance(v, dict):
+                continue
+            pk = parse_key(k)
+            if pk is None or pk.device == ck.device:
+                continue
+            if (pk.kind, pk.sig, pk.f, pk.op, pk.alpha) == (
+                ck.kind, ck.sig, ck.f, ck.op, ck.alpha
+            ):
+                out.append((k, v))
+        out.sort(
+            key=lambda kv: (
+                -float((kv[1].get("stats") or {}).get("probed_at") or 0.0),
+                kv[0],
+            )
+        )
+        return out
 
     def keys_for_op(self, op: str, kind: Optional[str] = None) -> List[str]:
         """All cached keys for one op (optionally one key kind), via the

@@ -8,11 +8,28 @@ winner lands in the probed top-k; the guardrail absorbs estimate error.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Iterable
 
 from repro.core.features import HardwareSpec, InputFeatures
 
 BYTES_F32 = 4
+
+
+def estimates_for(
+    feat: InputFeatures, hw: HardwareSpec, variants: Iterable
+) -> Dict[str, float]:
+    """Roofline estimate (ms) per variant full name, on ``hw``.
+
+    The one place estimates are derived for a candidate pool: the
+    shortlist stage (core/scheduler.py) and the cross-device transfer
+    re-rank (core/transfer.py) both call it, so a peer's `est_ms` at
+    probe time and the local re-estimate are guaranteed to come from the
+    same model — the residual probe/est is then a pure device+input
+    calibration term, not a model-version artifact."""
+    return {
+        v.full_name(): estimate(feat, hw, v.name, v.knobs) * 1e3
+        for v in variants
+    }
 
 
 def _roofline(bytes_moved: float, flops: float, hw: HardwareSpec) -> float:

@@ -7,7 +7,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+import os
+from typing import Dict, Optional
 
 import jax
 import numpy as np
@@ -32,16 +33,58 @@ class HardwareSpec:
         return HardwareSpec("tpu_v5e", 197e12, 819e9, 50e9)
 
     @staticmethod
+    def tpu_v4() -> "HardwareSpec":
+        return HardwareSpec("tpu_v4", 275e12, 1228e9, 45e9)
+
+    @staticmethod
     def cpu() -> "HardwareSpec":
         return HardwareSpec("cpu", 5e10, 2e10, 1e9, vmem_bytes=32 * 2**20)
 
     @staticmethod
+    def cpu_wide() -> "HardwareSpec":
+        """A memory-rich CPU-class roofline (4x the HBM bandwidth at the
+        same peak): bandwidth-bound candidates rank relatively cheaper
+        than on `cpu`. Exists so the cross-device transfer path can be
+        exercised — and CI-gated — on a single physical machine by
+        pairing it with an AUTOSAGE_DEVICE_SIG_OVERRIDE."""
+        return HardwareSpec("cpu_wide", 5e10, 8e10, 1e9, vmem_bytes=32 * 2**20)
+
+    @staticmethod
+    def from_profile(name: str) -> "HardwareSpec":
+        profiles: Dict[str, HardwareSpec] = {
+            "tpu_v5e": HardwareSpec.tpu_v5e(),
+            "tpu_v4": HardwareSpec.tpu_v4(),
+            "cpu": HardwareSpec.cpu(),
+            "cpu_wide": HardwareSpec.cpu_wide(),
+        }
+        try:
+            return profiles[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown hardware profile {name!r}; known: {sorted(profiles)}"
+            ) from None
+
+    @staticmethod
     def current() -> "HardwareSpec":
+        """Roofline profile of this process. AUTOSAGE_HW_PROFILE pins a
+        named profile regardless of the physical backend (used together
+        with AUTOSAGE_DEVICE_SIG_OVERRIDE to simulate a heterogeneous
+        fleet on one machine)."""
+        override = os.environ.get("AUTOSAGE_HW_PROFILE")
+        if override:
+            return HardwareSpec.from_profile(override)
         plat = jax.devices()[0].platform
         return HardwareSpec.tpu_v5e() if plat == "tpu" else HardwareSpec.cpu()
 
 
 def device_sig() -> str:
+    """Device identity embedded in every cache key. The env override
+    exists for heterogeneous-fleet simulation and the CI device matrix:
+    two processes on one physical box can act as two device classes (pair
+    it with AUTOSAGE_HW_PROFILE so their rooflines differ too)."""
+    override = os.environ.get("AUTOSAGE_DEVICE_SIG_OVERRIDE")
+    if override:
+        return override
     d = jax.devices()[0]
     return f"{d.platform}:{getattr(d, 'device_kind', '?')}:jax{jax.__version__}"
 
@@ -124,6 +167,30 @@ class InputFeatures:
             self.dense_tiles_est() * (1.0 - self.padding_waste),
             float(self.n_row_blocks8()),
         )
+
+    # ---- device-neutral serialization (cache schema v5) --------------
+    def to_neutral(self) -> Dict[str, object]:
+        """The device-free half of a schedule-cache entry: everything the
+        scheduler looked at that describes the *input*, none of what
+        describes the machine. A peer device reconstructs features from
+        this dict (`features_from_neutral`) to re-rank a probed candidate
+        set under its own roofline without ever seeing the graph."""
+        return dataclasses.asdict(self)
+
+
+def features_from_neutral(neutral: Dict[str, object]) -> InputFeatures:
+    """Inverse of InputFeatures.to_neutral(); unknown fields from newer
+    writers are dropped, missing ones take the dataclass defaults."""
+    known = {f.name: f for f in dataclasses.fields(InputFeatures)}
+    kwargs = {k: v for k, v in neutral.items() if k in known}
+    missing = [
+        n for n, f in known.items()
+        if n not in kwargs and f.default is dataclasses.MISSING
+        and f.default_factory is dataclasses.MISSING  # type: ignore[misc]
+    ]
+    if missing:
+        raise ValueError(f"neutral features missing required fields: {missing}")
+    return InputFeatures(**kwargs)
 
 
 def _block_padding_estimate(csr: CSR) -> tuple:

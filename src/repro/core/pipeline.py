@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import probe as probe_mod
 from repro.core import registry, telemetry
+from repro.core import transfer as transfer_mod
 from repro.core.cache import ScheduleCache
 from repro.core.features import InputFeatures, device_sig
 from repro.core.guardrail import apply_guardrail
@@ -70,9 +71,13 @@ def decide_attention(
     d: int,
     seed: int = 0,
     stage_breakdown: bool = False,
+    allow_transfer: bool = True,
 ) -> AttentionDecision:
     """estimate -> end-to-end probe -> guardrail -> cache, at pipeline
-    granularity. ``d`` is the head dimension (the F of the cache key)."""
+    granularity. ``d`` is the head dimension (the F of the cache key).
+    Like the per-op decide, an exact-key miss consults peer device
+    classes' probed rankings first (core/transfer.py) — a confident
+    re-rank under the local roofline skips the end-to-end probe."""
     feat = InputFeatures.from_csr(csr, d, "attention")
     key = ScheduleCache.key(device_sig(), feat.graph_sig, d, "attention", sage.alpha)
 
@@ -94,6 +99,27 @@ def decide_attention(
         return decision
 
     estimates, short = sage.shortlist(feat, cands)
+    plan = None
+    if (
+        allow_transfer and short and transfer_mod.enabled()
+        and sage.cache is not None and not sage.cache.replay_only
+    ):
+        plan = transfer_mod.best_plan(
+            sage.cache.peer_entries(key), feat, sage.hw, by_name, base,
+            sage.alpha,
+        )
+    if plan is not None and plan.confident:
+        decision = AttentionDecision(
+            op="attention", choice=plan.choice,
+            variant=by_name.get(plan.choice, base), guardrail=plan.guardrail,
+            from_cache=False, probe_ms={}, probe_overhead_ms=0.0,
+            probe_iter_ms=0.0, estimates_ms=estimates,
+            transfer=plan.provenance("confirmed"),
+        )
+        sage.cache.put(key, entry_with_stats(decision, feat, base.full_name()))
+        telemetry.emit_decide_event(decision, feat, kind="transfer")
+        telemetry.emit_attention_decision(decision)
+        return decision
     if short:
         outcome = sage.probe_candidates(
             csr, base, short, default_probe_args("attention", d, seed), seed=seed
@@ -116,11 +142,18 @@ def decide_attention(
         probe_overhead_ms=outcome.overhead_ms, probe_iter_ms=outcome.iter_ms,
         estimates_ms=estimates, stage_ms=stage_ms,
     )
+    if plan is not None:
+        # the end-to-end probe doubles as the transfer's confirm pass
+        decision.transfer = plan.provenance(
+            "confirmed" if gr.choice == plan.choice else "flipped"
+        )
     if sage.cache is not None:
-        # same v4 stats treatment as per-op decisions: the batch
-        # scheduler's drift detector tracks fused-vs-composed staleness
-        # per regime through these fields
-        sage.cache.put(key, entry_with_stats(decision, feat))
+        # same v5 stats + neutral treatment as per-op decisions: the
+        # batch scheduler's drift detector tracks fused-vs-composed
+        # staleness per regime through these fields, and the neutral
+        # ranking makes the pipeline decision transferable across
+        # device classes
+        sage.cache.put(key, entry_with_stats(decision, feat, base.full_name()))
     telemetry.emit_attention_decision(decision)
     return decision
 

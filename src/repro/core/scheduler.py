@@ -18,8 +18,14 @@ from repro.core import estimate as est
 from repro.core import probe as probe_mod
 from repro.core import registry
 from repro.core import telemetry
+from repro.core import transfer as transfer_mod
 from repro.core.cache import ScheduleCache
-from repro.core.features import HardwareSpec, InputFeatures, device_sig
+from repro.core.features import (
+    HardwareSpec,
+    InputFeatures,
+    device_sig,
+    waste_bin,
+)
 from repro.core.guardrail import GuardrailDecision, apply_guardrail
 from repro.sparse.csr import CSR
 
@@ -72,23 +78,51 @@ class Decision:
     probe_overhead_ms: float  # total warm-up: prepare + compile + iters
     probe_iter_ms: float  # steady-state probe iterations only
     estimates_ms: Dict[str, float]
+    # cross-device provenance (core/transfer.py): set when this decision
+    # was transferred from a peer device's probed ranking instead of (or
+    # before) being probed locally — source_device, verdict
+    # (confirmed/pending/flipped), rank_agreement, predicted_ms
+    transfer: Optional[Dict[str, Any]] = None
 
     def to_cache_entry(self) -> Dict[str, Any]:
-        return {
+        entry: Dict[str, Any] = {
             "choice": self.choice,
             "probe_ms": self.probe_ms,
             "estimates_ms": self.estimates_ms,
         }
+        if self.transfer is not None:
+            entry["transfer"] = dict(self.transfer)
+        return entry
 
 
-def entry_with_stats(decision: "Decision", feat: InputFeatures) -> Dict[str, Any]:
-    """Cache entry + schema-v4 running stats: the probe-measured cost of
-    the pinned choice and the probe-time padding regime are what the
-    drift detector (core/batch.py) compares live traffic against, and
-    `probed_at` is the fleet merge tiebreaker (last-probe-wins)."""
+def entry_with_stats(
+    decision: "Decision",
+    feat: InputFeatures,
+    base_full_name: Optional[str] = None,
+) -> Dict[str, Any]:
+    """Cache entry + running stats + the schema-v5 device-neutral part.
+
+    The stats are what the drift detector (core/batch.py) compares live
+    traffic against, and `probed_at` is the fleet merge tiebreaker
+    (last-probe-wins; a transferred-but-unprobed entry keeps 0.0 so any
+    real measurement beats it). The "neutral" dict is the transferable
+    half: input features plus the probed ranking with each candidate's
+    slope-probe ms and estimate ms at probe time — everything a peer
+    device class needs to re-rank this decision under its own roofline
+    (core/transfer.py)."""
     entry = decision.to_cache_entry()
     probed = bool(decision.probe_ms)
     entry["probed"] = probed
+    entry["neutral"] = {
+        "features": feat.to_neutral(),
+        "ranking": transfer_mod.build_ranking(
+            decision.probe_ms, decision.estimates_ms,
+            base_full_name or "baseline",
+        ),
+        "op": decision.op,
+        "f": feat.f,
+        "waste_bin": waste_bin(feat.padding_waste),
+    }
     entry["stats"] = {
         "probe_est_ms": decision.probe_ms.get(decision.choice),
         "waste_at_probe": feat.padding_waste,
@@ -200,10 +234,7 @@ class AutoSage:
         self, feat: InputFeatures, cands: List[registry.Variant]
     ) -> tuple:
         """Estimate stage: (estimates_ms, top-k non-baseline candidates)."""
-        estimates = {
-            v.full_name(): est.estimate(feat, self.hw, v.name, v.knobs) * 1e3
-            for v in cands
-        }
+        estimates = est.estimates_for(feat, self.hw, cands)
         short = sorted(
             (v for v in cands if not v.is_baseline),
             key=lambda v: estimates[v.full_name()],
@@ -218,11 +249,21 @@ class AutoSage:
         op: str,
         probe_args_fn: Optional[Callable[[CSR], tuple]] = None,
         seed: int = 0,
+        allow_transfer: bool = True,
     ) -> Decision:
         """The paper's `autosage_decide(features, F, op)`.
 
         probe_args_fn(sub_csr) -> dense args for one probe invocation;
         defaults to random dense operands of width F.
+
+        On an exact-key miss, a peer device class's probed entry for the
+        SAME graph can short-circuit the probe (estimate-space transfer,
+        core/transfer.py): a confident re-rank under the local roofline
+        is pinned and served with zero probes; a non-confident one runs
+        the normal probe, which then confirms or flips the transferred
+        prediction (provenance lands in the entry + decide_events).
+        ``allow_transfer=False`` forces a real local measurement — the
+        batch scheduler's confirm/drift re-probes use it.
         """
         feat = InputFeatures.from_csr(csr, f, op)
         key = ScheduleCache.key(device_sig(), feat.graph_sig, f, op, self.alpha)
@@ -248,6 +289,30 @@ class AutoSage:
             return decision
 
         estimates, short = self.shortlist(feat, cands)
+        plan = None
+        if (
+            allow_transfer and short and transfer_mod.enabled()
+            and self.cache is not None and not self.cache.replay_only
+        ):
+            plan = transfer_mod.best_plan(
+                self.cache.peer_entries(key), feat, self.hw, by_name, base,
+                self.alpha,
+            )
+        if plan is not None and plan.confident:
+            decision = Decision(
+                op=op, choice=plan.choice,
+                variant=by_name.get(plan.choice, base),
+                guardrail=plan.guardrail, from_cache=False, probe_ms={},
+                probe_overhead_ms=0.0, probe_iter_ms=0.0,
+                estimates_ms=estimates,
+                transfer=plan.provenance("confirmed"),
+            )
+            self.cache.put(
+                key, entry_with_stats(decision, feat, base.full_name())
+            )
+            telemetry.emit_decide_event(decision, feat, kind="transfer")
+            return decision
+
         if short:
             outcome = self.probe_candidates(
                 csr, base, short,
@@ -269,8 +334,15 @@ class AutoSage:
             probe_overhead_ms=outcome.overhead_ms,
             probe_iter_ms=outcome.iter_ms, estimates_ms=estimates,
         )
+        if plan is not None:
+            # the probe doubles as the transfer's confirm measurement
+            decision.transfer = plan.provenance(
+                "confirmed" if gr.choice == plan.choice else "flipped"
+            )
         if self.cache is not None:
-            self.cache.put(key, entry_with_stats(decision, feat))
+            self.cache.put(
+                key, entry_with_stats(decision, feat, base.full_name())
+            )
         telemetry.emit_decide_event(decision, feat)
         return decision
 
@@ -314,14 +386,16 @@ class AutoSage:
 
     # ---- pipeline-level CSR attention (core/pipeline.py) -------------
     def decide_attention(
-        self, csr: CSR, d: int, seed: int = 0, stage_breakdown: bool = False
+        self, csr: CSR, d: int, seed: int = 0, stage_breakdown: bool = False,
+        allow_transfer: bool = True,
     ):
         """Joint decision over composed {sddmm x softmax x spmm} pipelines
         and the fused Pallas kernel; cached under op="attention"."""
         from repro.core import pipeline
 
         return pipeline.decide_attention(
-            self, csr, d, seed=seed, stage_breakdown=stage_breakdown
+            self, csr, d, seed=seed, stage_breakdown=stage_breakdown,
+            allow_transfer=allow_transfer,
         )
 
     def attention(self, csr: CSR, q, k, v, seed: int = 0):

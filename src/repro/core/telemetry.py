@@ -133,6 +133,19 @@ def emit_decide_event(
         "choice": decision.choice,
         "from_cache": decision.from_cache,
     }
+    tr = getattr(decision, "transfer", None)
+    if tr:
+        # cross-device provenance: which peer donated the ranking, how
+        # the local re-rank agreed with it, and whether a local probe
+        # confirmed or flipped the transferred choice
+        rec["transfer"] = {
+            k: tr[k]
+            for k in (
+                "source_device", "verdict", "rank_agreement", "top1_agrees",
+                "peer_choice",
+            )
+            if k in tr
+        }
     if feat is not None:
         rec.update(
             graph_sig=feat.graph_sig,

@@ -1,0 +1,178 @@
+"""Cache schema v4 -> v5 migration: a committed v4 fixture file must
+round-trip through load / flush / shared merge with no entries, stats,
+or replay behavior lost — and v4 entries must already be usable as
+transfer donors (the ranking is synthesized from probe_ms/estimates_ms
+when the v5 "neutral" part is absent)."""
+import json
+import shutil
+from pathlib import Path
+
+import pytest
+
+from repro.core import AutoSage, BatchScheduler, ScheduleCache
+from repro.core import transfer as transfer_mod
+from repro.core.cache import SCHEMA_VERSION, ReplayMiss, default_stats
+from repro.sparse import fixed_degree, sample_subgraph_stream
+
+FIXTURE = Path(__file__).parent / "fixtures" / "cache_v4.json"
+
+EXACT_SPMM = "cpu:fixture:jax0.4|deadbeefcafef00d|F=32|spmm|a=0.95"
+EXACT_ATTN = "cpu:fixture:jax0.4|feedface01234567|F=16|attention|a=0.95"
+BUCKET_PROBED = (
+    "bucket|cpu:fixture:jax0.4|r10.z13.s0.d-2.w0.simple|F=16|spmm|a=0.95"
+)
+BUCKET_PROVISIONAL = (
+    "bucket|cpu:fixture:jax0.4|r10.z14.s2.d-2.w2.simple|F=16|spmm|a=0.95"
+)
+FOREIGN = "future|key|format|v9|unknown|extra"
+
+
+@pytest.fixture
+def v4_path(tmp_path):
+    path = tmp_path / "cache_v4.json"
+    shutil.copy(FIXTURE, path)
+    return str(path)
+
+
+def _fixture_data():
+    return json.load(open(FIXTURE))
+
+
+def test_v4_fixture_is_schema_4():
+    """The committed fixture must stay a v4 file — if a test run ever
+    rewrites it in place, the migration coverage silently evaporates."""
+    data = _fixture_data()
+    schemas = {
+        v.get("schema") for v in data.values() if isinstance(v, dict)
+    }
+    assert schemas == {4}
+    assert not any(
+        "neutral" in v for v in data.values() if isinstance(v, dict)
+    )
+
+
+def test_v4_load_preserves_entries_and_stats(v4_path):
+    c = ScheduleCache(path=v4_path)
+    orig = _fixture_data()
+    for key, old in orig.items():
+        if not isinstance(old, dict):
+            continue
+        entry = c.get(key)
+        assert entry["choice"] == old["choice"]
+        assert entry.get("probe_ms") == old.get("probe_ms")
+        assert entry.get("estimates_ms") == old.get("estimates_ms")
+        # v4 stats survive verbatim; every v5 default field exists
+        for field, value in old["stats"].items():
+            assert entry["stats"][field] == value
+        for field in default_stats():
+            assert field in entry["stats"]
+    # the attention entry keeps its stage breakdown
+    assert c.get(EXACT_ATTN)["stage_ms"]["softmax"] == 0.4
+    # foreign key carried along untouched
+    assert c._data[FOREIGN] == "opaque-forward-compat-value"
+
+
+def test_v4_flush_roundtrip_loses_nothing(v4_path):
+    c = ScheduleCache(path=v4_path)
+    c.put("new-key", {"choice": "dense"})  # eager flush rewrites the file
+    reloaded = json.load(open(v4_path))
+    orig = _fixture_data()
+    assert set(orig) <= set(reloaded)
+    for key, old in orig.items():
+        if not isinstance(old, dict):
+            assert reloaded[key] == old
+            continue
+        assert reloaded[key]["choice"] == old["choice"]
+        assert reloaded[key]["stats"]["hits"] == old["stats"]["hits"]
+        assert reloaded[key]["stats"]["probed_at"] == old["stats"]["probed_at"]
+    assert reloaded["new-key"]["schema"] == SCHEMA_VERSION
+
+
+def test_v4_shared_merge_loses_nothing(v4_path):
+    """Two shared cache objects (one holding the v4 file, one fresh)
+    flush concurrently-ish: the merged file holds the union, v4 hit
+    counts accumulate instead of resetting."""
+    a = ScheduleCache(path=v4_path, shared=True)
+    b = ScheduleCache(path=v4_path, shared=True)
+    a.add_hits(EXACT_SPMM, 3)
+    b.add_hits(EXACT_SPMM, 2)
+    a.put("a-key", {"choice": "x", "stats": {"probed_at": 9.0}})
+    b.put("b-key", {"choice": "y", "stats": {"probed_at": 9.0}})
+    a.flush()
+    b.flush()
+    final = ScheduleCache(path=v4_path)
+    orig = _fixture_data()
+    for key in orig:
+        assert final.contains(key), key
+    assert final.stats(EXACT_SPMM)["hits"] == orig[EXACT_SPMM]["stats"]["hits"] + 5
+    assert final.contains("a-key") and final.contains("b-key")
+    # decision payloads untouched by the merge
+    assert final.get(BUCKET_PROBED)["choice"] == "row_ell"
+    assert final.get(BUCKET_PROVISIONAL)["probed"] is False
+
+
+def test_v4_replay_behavior_preserved(v4_path):
+    replay = ScheduleCache(path=v4_path, replay_only=True)
+    for key, old in _fixture_data().items():
+        if isinstance(old, dict):
+            assert replay.get(key)["choice"] == old["choice"]
+    with pytest.raises(ReplayMiss):
+        replay.get("never-pinned-key")
+    with pytest.raises(ReplayMiss):
+        replay.put("k", {"choice": "x"})
+
+
+def test_v4_bucket_replays_through_batch_scheduler(tmp_path, monkeypatch):
+    """End-to-end replay parity across the schema bump: decisions pinned
+    by a (v4-keyed) run are re-served identically after the file has been
+    rewritten at v5 by a later put."""
+    path = str(tmp_path / "m.json")
+    monkeypatch.setenv("AUTOSAGE_DEVICE_SIG_OVERRIDE", "migrate-sim")
+    stream = sample_subgraph_stream(
+        [fixed_degree(2048, 12, seed=1)], 4, rows_per_graph=256, seed=2
+    )
+    sage = AutoSage(
+        cache=ScheduleCache(path=path), probe_iters=1, probe_cap_ms=25,
+        probe_frac=0.25,
+    )
+    with BatchScheduler(sage, probe_budget_ms=10_000) as bs:
+        choices = [bs.decide(g, 16, "spmm").choice for g in stream]
+    # strip the entries back to v4 shape (drop the v5 neutral part),
+    # as an old writer would have left them
+    data = json.load(open(path))
+    for v in data.values():
+        if isinstance(v, dict):
+            v.pop("neutral", None)
+            v["schema"] = 4
+    json.dump(data, open(path, "w"))
+
+    rbs = BatchScheduler(
+        AutoSage(cache=ScheduleCache(path=path, replay_only=True))
+    )
+    replayed = [rbs.decide(g, 16, "spmm").choice for g in stream]
+    assert replayed == choices
+    assert rbs.stats()["probes_run"] == 0
+
+
+def test_v4_entry_is_a_transfer_donor(v4_path, monkeypatch):
+    """peer_entries + plan_transfer work straight off the v4 fixture: the
+    probed ranking is synthesized, so pre-v5 fleets donate decisions the
+    day the schema lands."""
+    from repro.core import HardwareSpec, InputFeatures, registry
+
+    monkeypatch.setenv("AUTOSAGE_DEVICE_SIG_OVERRIDE", "other-device")
+    c = ScheduleCache(path=v4_path)
+    local_key = BUCKET_PROBED.replace("cpu:fixture:jax0.4", "other-device")
+    peers = c.peer_entries(local_key)
+    assert [k for k, _ in peers] == [BUCKET_PROBED]
+
+    csr = fixed_degree(1400, 12, seed=3)
+    feat = InputFeatures.from_csr(csr, 16, "spmm")
+    hw = HardwareSpec.cpu_wide()
+    cands = registry.candidates(feat, hw)
+    base = registry.baseline(feat, hw)
+    by_name = {v.full_name(): v for v in cands}
+    plan = transfer_mod.best_plan(peers, feat, hw, by_name, base, 0.95)
+    assert plan is not None
+    assert plan.source_device == "cpu:fixture:jax0.4"
+    assert plan.choice in by_name or plan.choice == "baseline"
