@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import AutoSage, BatchScheduler, ReplayMiss, ScheduleCache
 from repro.core import estimate as est_mod
 from repro.core.features import InputFeatures, HardwareSpec
@@ -958,14 +959,16 @@ def smoke(full: bool = False) -> List[Tuple]:
         probe_frac=0.25,
     )
     b = rng.standard_normal((csr.n_cols, 32)).astype(np.float32)
-    out, d_spmm = sage.spmm(csr, jnp.asarray(b))
+    d_spmm = sage.decide(csr, 32, "spmm")
+    out = api.spmm(csr, jnp.asarray(b), sage=sage, differentiable=False)
     assert np.isfinite(np.asarray(out)).all()
 
     f = 16
     q = jnp.asarray(rng.standard_normal((csr.n_rows, f)).astype(np.float32))
     k = jnp.asarray(rng.standard_normal((csr.n_cols, f)).astype(np.float32))
     v = jnp.asarray(rng.standard_normal((csr.n_cols, f)).astype(np.float32))
-    out_a, d_attn = sage.attention(csr, q, k, v)
+    d_attn = sage.decide_attention(csr, f)
+    out_a = api.attention(csr, q, k, v, sage=sage, differentiable=False)
     exp = ref.csr_attention_ref(
         jnp.asarray(csr.rowptr), jnp.asarray(csr.colind), q, k, v
     )
@@ -979,6 +982,137 @@ def smoke(full: bool = False) -> List[Tuple]:
     for op, n_probed, choice in rows:
         print(f"  [smoke] {op:10s} choice={choice} candidates_probed={n_probed}")
     write_csv(f"{OUT}/smoke.csv", ["op", "candidates_probed", "choice"], rows)
+    return rows
+
+
+def _train_setup(scale: float):
+    from repro.configs.base import get_config
+    from repro.models.gnn import init_gnn
+
+    cfg = get_config("gnn_sage")
+    graph = reddit_like(scale=scale)
+    rng = np.random.default_rng(0)
+    in_dim, classes = 64, 16
+    x = jnp.asarray(rng.standard_normal((graph.n_rows, in_dim)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, classes, graph.n_rows).astype(np.int32))
+    params = init_gnn(cfg, jax.random.PRNGKey(0), in_dim, classes)
+    return cfg, graph, x, y, params
+
+
+def _train_loss(params, graph, x, y, sage):
+    from repro.models.gnn import sage_forward
+
+    logits = sage_forward(params, graph, x, sage=sage)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, y[:, None], 1).mean()
+
+
+def train_step(full: bool = False) -> List[Tuple]:
+    """Nightly: differentiable-scheduling cost accounting for a GNN
+    training step (core/autodiff.py).
+
+    Section 1 (full graph): forward-only loss vs the fully-scheduled
+    value_and_grad step, both jitted — the step's backward SpMM runs as
+    its own scheduled op (op="spmm_bwd_b" on the memoized transpose), so
+    the comparison shows what scheduling the backward costs/buys relative
+    to pure forward inference. All decides happen at trace time; the
+    timed region re-probes nothing.
+
+    Section 2 (minibatch stream): value_and_grad through a
+    BatchScheduler over sampled subgraphs — forward AND backward decides
+    bucket together, so probes are paid once per (bucket, op) and every
+    later step's backward is probe-free (probes_avoided in the row).
+    """
+    cfg, graph, x, y, params = _train_setup(0.25 if full else 0.02)
+    sage = _fresh_sage(probe_iters=2, probe_cap_ms=100)
+
+    fwd = jax.jit(lambda p: _train_loss(p, graph, x, y, sage))
+    step = jax.jit(jax.value_and_grad(lambda p: _train_loss(p, graph, x, y, sage)))
+    t_fwd = _measure_full(lambda: fwd(params))
+    t_step = _measure_full(lambda: step(params))
+    n_bwd = len(sage.cache.keys_for_op("spmm_bwd_b"))
+
+    from repro.sparse.csr import TRANSPOSE_STATS
+
+    sage2 = _fresh_sage(probe_iters=2, probe_cap_ms=100)
+    rng = np.random.default_rng(1)
+    batch = max(64, graph.n_rows // 8)
+    n_steps = 12 if full else 6
+    from repro.models.gnn import sage_minibatch_forward
+
+    with BatchScheduler(sage2, probe_budget_ms=2000.0) as bs:
+        for _ in range(n_steps):
+            rows_idx = np.sort(
+                rng.choice(graph.n_rows, size=batch, replace=False)
+            )
+            sub = graph.row_slice(rows_idx)
+            yb = y[jnp.asarray(rows_idx)]
+
+            def loss_fn(p):
+                logits = sage_minibatch_forward(p, sub, rows_idx, x, sage=bs)
+                logp = jax.nn.log_softmax(logits)
+                return -jnp.take_along_axis(logp, yb[:, None], 1).mean()
+
+            loss, _ = jax.value_and_grad(loss_fn)(params)
+            jax.block_until_ready(loss)
+    s = bs.stats()
+
+    rows: List[Tuple] = [
+        ("full_fwd_only", round(t_fwd, 3), "-", "-"),
+        ("full_train_step", round(t_step, 3), n_bwd,
+         f"bwd_ops_cached={n_bwd}"),
+        ("stream_decides", s["decides"], s["probes_run"],
+         f"avoided={s['probes_avoided']}"),
+        ("transpose_cache", TRANSPOSE_STATS["built"],
+         TRANSPOSE_STATS["hits"],
+         f"built={TRANSPOSE_STATS['built']} reused={TRANSPOSE_STATS['hits']}"),
+    ]
+    for name, a, b, note in rows:
+        print(f"  [train_step] {name:16s} {a!s:>8s} {b!s:>6s} {note}")
+    write_csv(f"{OUT}/train_step.csv", ["metric", "value_a", "value_b", "note"], rows)
+    return rows
+
+
+def train_smoke(full: bool = False) -> List[Tuple]:
+    """Seconds-fast CI gate on differentiable scheduling: one scheduled
+    value_and_grad step must produce finite grads that match the
+    reference-pipeline grads, cache distinct backward-op entries, and
+    reuse (not rebuild) the transposed layout on the second step."""
+    del full
+    from repro.sparse.csr import TRANSPOSE_STATS, reset_transpose_stats
+
+    cfg, graph, x, y, params = _train_setup(0.01)
+    sage = _fresh_sage(probe_iters=1, probe_cap_ms=50)
+    reset_transpose_stats()
+
+    step = jax.jit(jax.value_and_grad(lambda p: _train_loss(p, graph, x, y, sage)))
+    loss, g = step(params)
+    built_after_first = TRANSPOSE_STATS["built"]
+    loss2, g2 = step(params)
+    assert np.isfinite(float(loss)) and np.isfinite(float(loss2))
+    flat = jax.tree.leaves(g)
+    assert all(np.isfinite(np.asarray(leaf)).all() for leaf in flat)
+    n_bwd = len(sage.cache.keys_for_op("spmm_bwd_b"))
+    assert n_bwd >= 1, "backward decisions must land in the cache"
+    assert TRANSPOSE_STATS["built"] == built_after_first, (
+        "second step must reuse the memoized transpose", TRANSPOSE_STATS,
+    )
+    # scheduled grads == reference grads (the custom_vjp contract)
+    _, g_ref = jax.jit(
+        jax.value_and_grad(lambda p: _train_loss(p, graph, x, y, None))
+    )(params)
+    for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=5e-3, atol=5e-3
+        )
+    rows = [
+        ("train_smoke", n_bwd, TRANSPOSE_STATS["built"],
+         f"loss={float(loss):.4f}")
+    ]
+    print(f"  [train_smoke] bwd_ops={n_bwd} transposes_built="
+          f"{TRANSPOSE_STATS['built']} grads_match_ref=True")
+    write_csv(f"{OUT}/train_smoke.csv",
+              ["metric", "bwd_ops", "transposes_built", "note"], rows)
     return rows
 
 
@@ -996,6 +1130,7 @@ ALL_TABLES = {
     "skew_stress": skew_stress,
     "shared_cache": shared_cache,
     "portability": portability,
+    "train_step": train_step,
 }
 
 # run only via --smoke (CI) or --only <name>; not part of the default sweep
@@ -1005,4 +1140,5 @@ SMOKE_TABLES = {
     "skew_smoke": skew_smoke,
     "shared_smoke": shared_smoke,
     "portability_smoke": portability_smoke,
+    "train_smoke": train_smoke,
 }

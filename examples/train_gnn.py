@@ -37,6 +37,7 @@ from repro.configs.base import get_config
 from repro.core import AutoSage, BatchScheduler, ScheduleCache
 from repro.models.gnn import init_gnn, sage_forward, sage_minibatch_forward
 from repro.sparse import reddit_like
+from repro.sparse.csr import TRANSPOSE_STATS
 
 
 def make_data(graph, classes, in_dim, seed=0):
@@ -56,7 +57,11 @@ def train_full(args, cfg, graph, x, y, classes, in_dim):
     params = init_gnn(cfg, jax.random.PRNGKey(0), in_dim, classes)
 
     def loss_fn(p):
-        logits = sage_forward(p, graph, x)  # AutoSAGE inside would re-probe
+        # fully scheduled step: forward SpMMs AND their backward
+        # (op="spmm_bwd_b" on the memoized transpose) each get their own
+        # decision. All decides + probes run host-side at trace time, so
+        # the jitted step re-probes nothing.
+        logits = sage_forward(p, graph, x, sage=sage)
         logp = jax.nn.log_softmax(logits)
         return -jnp.take_along_axis(logp, y[:, None], 1).mean()
 
@@ -68,9 +73,15 @@ def train_full(args, cfg, graph, x, y, classes, in_dim):
         params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
         if epoch % 5 == 0 or epoch == args.epochs - 1:
             print(f"epoch {epoch:3d} loss {float(loss):.4f} ({time.time()-t0:.1f}s)")
-    # show what the scheduler picks for this graph at this width
+    # show what the scheduler picked, fwd and bwd
     d = sage.decide(graph, cfg.d_model, "spmm")
     print(f"scheduler choice for aggregation at F={cfg.d_model}: {d.choice}")
+    n_bwd = len(sage.cache.keys_for_op("spmm_bwd_b"))
+    print(
+        f"backward decisions cached (op=spmm_bwd_b): {n_bwd}; "
+        f"csr transposes built={TRANSPOSE_STATS['built']} "
+        f"reused={TRANSPOSE_STATS['hits']}"
+    )
 
 
 def train_minibatch(args, cfg, graph, x, y, classes, in_dim):
@@ -110,8 +121,9 @@ def train_minibatch(args, cfg, graph, x, y, classes, in_dim):
                 loss, g = jax.value_and_grad(loss_fn)(params)
                 jax.block_until_ready(loss)
                 step_ms = (time.perf_counter() - t_step) * 1e3
-                # the forward's decide already bucketed this subgraph;
-                # last_bucket avoids a second feature extraction per step
+                # the step's decides (forward spmm + its scheduled
+                # backward) already bucketed this subgraph; last_bucket
+                # avoids a second feature extraction per step
                 bs.observe(bs.last_bucket, step_ms)
                 params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
                 losses.append(float(loss))
@@ -130,6 +142,11 @@ def train_minibatch(args, cfg, graph, x, y, classes, in_dim):
     )
     for row in bs.bucket_stats():
         print(f"  bucket {row['bucket']}: hits={row['hits']} choice={row['choice']}")
+    print(
+        f"transposed layouts: built={TRANSPOSE_STATS['built']} "
+        f"reused={TRANSPOSE_STATS['hits']} "
+        "(backward SpMMs share the per-structure transpose cache)"
+    )
     if args.stats_json:
         with open(args.stats_json, "w") as fh:
             json.dump(s, fh)

@@ -1,0 +1,21 @@
+"""AutoSAGE reproduction: input-aware scheduling for sparse GNN ops.
+
+The documented entry point is the functional facade:
+
+    from repro import api
+    c = api.spmm(csr, b, sage=sage)
+
+`repro.api` is exposed lazily so that `import repro` stays cheap (no
+eager jax import) for tooling that only touches e.g. repro.sparse.
+"""
+from __future__ import annotations
+
+__all__ = ["api"]
+
+
+def __getattr__(name):
+    if name == "api":
+        import importlib
+
+        return importlib.import_module("repro.api")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -1,0 +1,179 @@
+"""Differentiable scheduled sparse ops: `jax.custom_vjp` wrappers whose
+backward passes are first-class scheduled ops.
+
+Forward-only scheduling covers at most half a training step — the
+backward of every sparse op is itself a sparse op with *different* shapes
+and inverted skew (SpMM's backward is an SDDMM on the forward pattern
+plus an SpMM on the transposed CSR, whose degree distribution is the
+in-degree histogram, not the out-degree one). Each backward op therefore
+gets its own decision: its own `InputFeatures`, cache key (distinct `op`
+strings like "spmm_bwd_b" with the cotangent-side F), `ScheduleBucket`,
+and the full estimate -> probe -> guardrail -> cache/replay path through
+`AutoSage.decide` or `BatchScheduler.decide`. Op taxonomy (which compute
+family each grad op draws candidates from, and whether its sparse values
+are a runtime operand) lives in core/features.py; the dynamic-vals
+variant family in core/registry.py.
+
+Layout amortization: the transposed CSR comes from the memoized
+`CSR.transpose_with_perm()` (sparse/csr.py), and `build_runner` memoizes
+the prepared backward layout per (transposed graph, op, choice) — after
+step 1 a training loop re-converts nothing.
+
+Entry point for users is the `repro.api` facade; models/gnn.py routes
+through it.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.sparse.csr import CSR
+
+
+def _decide(sched, csr: CSR, f: int, op: str):
+    """One scheduled decision; AutoSage's pipeline-level attention decide
+    when available (BatchScheduler buckets attention via generic decide)."""
+    if op == "attention" and hasattr(sched, "decide_attention"):
+        return sched.decide_attention(csr, f)
+    return sched.decide(csr, f, op)
+
+
+def _scheduled(sched, csr: CSR, f: int, op: str, *args):
+    """decide + (memoized) prepare + run one scheduled op."""
+    d = _decide(sched, csr, int(f), op)
+    return sched.build_runner(csr, d)(*args)
+
+
+# ----------------------------------------------------------------- SpMM
+def spmm(csr: CSR, b: jax.Array, *, sched, vals: Optional[jax.Array] = None):
+    """C = A @ B through the scheduler, differentiable.
+
+    vals=None (the GNN training path): A's stored values are constants,
+    the forward runs the baked scheduled runner, and the only cotangent
+    is grad_B — one scheduled SpMM over the memoized transpose under
+    op="spmm_bwd_b" (no wasted SDDMM for a grad nobody asked for).
+
+    vals given: runtime edge values (a jax array; may be traced). The
+    forward runs the dynamic-vals family (op="spmm_dyn") and the backward
+    returns both cotangents: grad_vals is a scheduled SDDMM on the
+    forward pattern (op="spmm_bwd_vals"), grad_B a dynamic-vals SpMM on
+    the transpose (op="spmm_bwd_b_dyn") with the permuted cotangent
+    values.
+    """
+    if vals is None:
+        @jax.custom_vjp
+        def _f(b):
+            return _scheduled(sched, csr, b.shape[1], "spmm", b)
+
+        def _fwd(b):
+            return _f(b), None
+
+        def _bwd(_, g):
+            t, _ = csr.transpose_with_perm()
+            gb = _scheduled(sched, t, g.shape[1], "spmm_bwd_b", g)
+            return (gb.astype(g.dtype),)
+
+        _f.defvjp(_fwd, _bwd)
+        return _f(b)
+
+    vals = jnp.asarray(vals)
+    s = csr.structural()
+
+    @jax.custom_vjp
+    def _f(vals, b):
+        return _scheduled(sched, s, b.shape[1], "spmm_dyn", vals, b)
+
+    def _fwd(vals, b):
+        return _f(vals, b), (vals, b)
+
+    def _bwd(res, g):
+        vals_r, b_r = res
+        gv = _scheduled(sched, s, b_r.shape[1], "spmm_bwd_vals", g, b_r)
+        t, perm = s.transpose_with_perm()
+        gb = _scheduled(
+            sched, t, g.shape[1], "spmm_bwd_b_dyn", vals_r[perm], g
+        )
+        return gv.astype(vals_r.dtype), gb.astype(b_r.dtype)
+
+    _f.defvjp(_fwd, _bwd)
+    return _f(vals, b)
+
+
+# ---------------------------------------------------------------- SDDMM
+def sddmm(csr: CSR, x: jax.Array, y: jax.Array, *, sched):
+    """Per-edge <X_i, Y_j> on S(A) through the scheduler, differentiable.
+
+    The backward scatters the per-edge cotangent through the pattern:
+    grad_X = A(g) @ Y (op="sddmm_bwd_x"), grad_Y = A^T(g) @ X
+    (op="sddmm_bwd_y") — both dynamic-vals SpMMs, since g is a traced
+    cotangent that changes every step while the prepared layout does not.
+    """
+    s = csr.structural()
+
+    @jax.custom_vjp
+    def _f(x, y):
+        return _scheduled(sched, s, x.shape[1], "sddmm", x, y)
+
+    def _fwd(x, y):
+        return _f(x, y), (x, y)
+
+    def _bwd(res, g):
+        x_r, y_r = res
+        gx = _scheduled(sched, s, y_r.shape[1], "sddmm_bwd_x", g, y_r)
+        t, perm = s.transpose_with_perm()
+        gy = _scheduled(sched, t, x_r.shape[1], "sddmm_bwd_y", g[perm], x_r)
+        return gx.astype(x_r.dtype), gy.astype(y_r.dtype)
+
+    _f.defvjp(_fwd, _bwd)
+    return _f(x, y)
+
+
+# ------------------------------------------------------------ attention
+def attention(csr: CSR, q: jax.Array, k: jax.Array, v: jax.Array, *, sched):
+    """CSR attention (SDDMM -> row-softmax -> SpMM) through the
+    pipeline-level scheduler, differentiable.
+
+    The forward is the joint op="attention" decision (fused Pallas kernel
+    or a composed 3-kernel pipeline). There is no fused backward kernel,
+    so the backward decomposes into its sparse pieces, each scheduled in
+    its own right: logits recompute and grad-of-probs are pattern-only
+    SDDMMs ("attention_bwd_e" / "attention_bwd_p"), the q/k/v grads are
+    dynamic-vals SpMMs ("attention_bwd_q"/"_k"/"_v") whose sparse values
+    are the probs / softmax-VJP'd logits; the softmax VJP itself is a
+    cheap segment op. Scale is the pipeline's default 1/sqrt(d).
+    """
+    s = csr.structural()
+
+    @jax.custom_vjp
+    def _f(q, k, v):
+        return _scheduled(sched, s, q.shape[1], "attention", q, k, v)
+
+    def _fwd(q, k, v):
+        return _f(q, k, v), (q, k, v)
+
+    def _bwd(res, g):
+        q_r, k_r, v_r = res
+        scale = 1.0 / (q_r.shape[-1] ** 0.5)
+        rowptr, colind = jnp.asarray(s.rowptr), jnp.asarray(s.colind)
+        # recompute the probs (the fused forward never materializes them)
+        e = _scheduled(sched, s, q_r.shape[1], "attention_bwd_e", q_r, k_r)
+        probs = ref.row_softmax_ref(rowptr, colind, e * scale)
+        t, perm = s.transpose_with_perm()
+        # grad_V = A^T(probs) @ g
+        gv = _scheduled(
+            sched, t, g.shape[1], "attention_bwd_v", probs[perm], g
+        )
+        # grad w.r.t. probs: per-edge <g_i, V_j>, then the softmax VJP
+        gp = _scheduled(sched, s, g.shape[1], "attention_bwd_p", g, v_r)
+        gl = ref.row_softmax_bwd_ref(rowptr, colind, probs, gp) * scale
+        gq = _scheduled(sched, s, k_r.shape[1], "attention_bwd_q", gl, k_r)
+        gk = _scheduled(
+            sched, t, q_r.shape[1], "attention_bwd_k", gl[perm], q_r
+        )
+        return gq.astype(q_r.dtype), gk.astype(k_r.dtype), gv.astype(v_r.dtype)
+
+    _f.defvjp(_fwd, _bwd)
+    return _f(q, k, v)

@@ -10,7 +10,12 @@ from __future__ import annotations
 
 from typing import Dict, Iterable
 
-from repro.core.features import HardwareSpec, InputFeatures
+from repro.core.features import (
+    HardwareSpec,
+    InputFeatures,
+    op_dynamic_vals,
+    op_kind,
+)
 
 BYTES_F32 = 4
 
@@ -197,9 +202,18 @@ def estimate_attention(feat: InputFeatures, hw: HardwareSpec, variant: str,
 
 def estimate(feat: InputFeatures, hw: HardwareSpec, variant: str,
              knobs: Dict) -> float:
-    if feat.op == "spmm":
-        return estimate_spmm(feat, hw, variant, knobs)
-    if feat.op in ("sddmm",):
+    """Dispatch on the op's structural compute kind: grad ops
+    (core/autodiff.py) reuse the forward models — "spmm_bwd_b" is an
+    SpMM roofline over the transposed features, "spmm_bwd_vals" an SDDMM
+    one. Dynamic-vals ops pay one extra nnz-sized scatter (the runtime
+    cotangent values landing in the prepared layout's value table)."""
+    kind = op_kind(feat.op)
+    if kind == "spmm":
+        t = estimate_spmm(feat, hw, variant, knobs)
+        if op_dynamic_vals(feat.op):
+            t += feat.nnz * (BYTES_F32 + 8) / hw.hbm_bw
+        return t
+    if kind == "sddmm":
         return estimate_sddmm(feat, hw, variant, knobs)
     if feat.op == "attention":
         return estimate_attention(feat, hw, variant, knobs)

@@ -89,6 +89,61 @@ def device_sig() -> str:
     return f"{d.platform}:{getattr(d, 'device_kind', '?')}:jax{jax.__version__}"
 
 
+# ---------------------------------------------------------------- ops
+# Op taxonomy. Forward ops plus the first-class backward ("grad") ops
+# introduced by core/autodiff.py: every op string is its own cache-key /
+# ScheduleBucket dimension (backward shapes invert skew and carry the
+# cotangent-side F, so a forward decision must never be handed down), but
+# candidates, roofline estimates, and probe operands are derived from the
+# *structural compute kind* — e.g. "spmm_bwd_b" IS an SpMM (on the
+# transposed CSR), "spmm_bwd_vals" IS an SDDMM (on the forward pattern).
+# `dynamic_vals` marks ops whose sparse values are a runtime operand
+# (cotangent-dependent, traced under jax.grad) rather than baked into the
+# prepared layout: their runners take (vals, b) and stay valid across
+# steps, so AutoSage's runner memo applies to backward kernels too.
+_OP_TAXONOMY = {
+    # op                  (kind,        dynamic_vals)
+    "spmm": ("spmm", False),
+    "sddmm": ("sddmm", False),
+    "attention": ("attention", False),
+    "csr_attention": ("attention", False),  # legacy per-op attention keys
+    # grad of spmm(A, B): dvals = SDDMM(grad, B) on S(A); dB = A^T @ grad
+    "spmm_bwd_b": ("spmm", False),
+    "spmm_bwd_b_dyn": ("spmm", True),  # runtime-valued A (vals traced)
+    "spmm_bwd_vals": ("sddmm", False),
+    "spmm_dyn": ("spmm", True),  # forward spmm with runtime edge values
+    # grad of sddmm(A, X, Y): dX = A(g) @ Y; dY = A^T(g) @ X
+    "sddmm_bwd_x": ("spmm", True),
+    "sddmm_bwd_y": ("spmm", True),
+    # grad of attention(A, Q, K, V): logits recompute + probs grad are
+    # pattern-only SDDMMs; q/k/v grads are runtime-valued SpMMs
+    "attention_bwd_e": ("sddmm", False),
+    "attention_bwd_p": ("sddmm", False),
+    "attention_bwd_q": ("spmm", True),
+    "attention_bwd_k": ("spmm", True),
+    "attention_bwd_v": ("spmm", True),
+}
+
+GRAD_OPS = tuple(op for op in _OP_TAXONOMY if "_bwd_" in op)
+
+
+def op_kind(op: str) -> str:
+    """Structural compute family of ``op`` ("spmm"|"sddmm"|"attention")."""
+    try:
+        return _OP_TAXONOMY[op][0]
+    except KeyError:
+        raise KeyError(f"unknown op {op!r}") from None
+
+
+def op_dynamic_vals(op: str) -> bool:
+    """True if the op's sparse values arrive per call (cotangent-shaped
+    runtime operand) instead of being baked at prepare time."""
+    try:
+        return _OP_TAXONOMY[op][1]
+    except KeyError:
+        raise KeyError(f"unknown op {op!r}") from None
+
+
 @dataclasses.dataclass(frozen=True)
 class InputFeatures:
     """Everything the scheduler is allowed to look at."""
@@ -103,8 +158,9 @@ class InputFeatures:
     deg_max: float
     skew: float  # p99 / max(p50, 1) — heavy-tail indicator
     density: float
-    f: int  # feature width F
-    op: str  # "spmm" | "sddmm" | "attention"
+    f: int  # feature width F (for grad ops: the cotangent-side F)
+    op: str  # any key of _OP_TAXONOMY: "spmm" | "sddmm" | "attention"
+    #         | grad ops like "spmm_bwd_b" (see op_kind/op_dynamic_vals)
     graph_sig: str
     f_mod_4: bool  # paper's vec4 applicability bit (lane-align analogue)
     # duplicate (row, col) entries change attention-mask semantics (the

@@ -28,7 +28,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.features import HardwareSpec, InputFeatures
+from repro.core.features import (
+    HardwareSpec,
+    InputFeatures,
+    op_dynamic_vals,
+    op_kind,
+)
+from repro.kernels import ref
 from repro.kernels import xla as kx
 from repro.sparse.bsr import block_ell_edge_index, csr_to_block_ell, hub_split
 from repro.sparse.csr import CSR
@@ -312,6 +318,138 @@ def _pallas_spmm_variants(feat: InputFeatures, interpret: bool) -> List[Variant]
                    "hub_threshold": hub_t},
         )
     )
+    return out
+
+
+# ------------------------------------------------ dynamic-vals SpMM
+# Runtime-valued SpMM variants for the grad ops (core/autodiff.py):
+# sddmm/attention backward scatter the *cotangent* through the sparsity
+# pattern, so the sparse values are a traced jax array that changes per
+# step and cannot be baked into the prepared layout. These runners take
+# (vals, b): prepare converts the structure once (memoizable), and each
+# call scatters the nnz-vector into the layout's value table on device.
+
+@jax.jit
+def _spmm_gather_dyn_jit(aux: Dict, vals: jax.Array, b: jax.Array) -> jax.Array:
+    return ref.spmm_ref(aux["rowptr"], aux["colind"], vals, b)
+
+
+@jax.jit
+def _spmm_ell_dyn_jit(aux: Dict, vals: jax.Array, b: jax.Array) -> jax.Array:
+    # each edge owns one (row, slot) cell, so duplicates keep distinct
+    # slots and .set preserves accumulate-on-duplicate SpMM semantics
+    table = (
+        jnp.zeros(aux["colind"].shape, jnp.float32)
+        .at[aux["edge_row"], aux["edge_slot"]]
+        .set(vals.astype(jnp.float32))
+    )
+    return kx.spmm_row_ell({"colind": aux["colind"], "val": table}, b)
+
+
+def _prep_csr_structural(csr: CSR) -> Dict[str, np.ndarray]:
+    return {
+        "rowptr": np.asarray(csr.rowptr, np.int32),
+        "colind": np.asarray(csr.colind, np.int32),
+    }
+
+
+def _prep_row_ell_dyn(csr: CSR) -> Dict[str, np.ndarray]:
+    s = csr.structural()
+    ell = kx.prepare_row_ell(s)
+    return {"colind": ell["colind"], **kx.prepare_edge_slots(s)}
+
+
+def _spmm_dyn_variants(feat: InputFeatures) -> List[Variant]:
+    return [
+        Variant(
+            name="gather_segsum",
+            op=feat.op,
+            prepare=_prep_csr_structural,
+            build=lambda aux: (
+                lambda vals, b, a=_dev(aux): _spmm_gather_dyn_jit(a, vals, b)
+            ),
+            applicable=lambda f, hw: True,
+            is_baseline=True,
+        ),
+        Variant(
+            name="row_ell",
+            op=feat.op,
+            prepare=_prep_row_ell_dyn,
+            build=lambda aux: (
+                lambda vals, b, a=_dev(aux): _spmm_ell_dyn_jit(a, vals, b)
+            ),
+            applicable=lambda f, hw: _ell_applicable(f),
+        ),
+    ]
+
+
+def _pallas_spmm_dyn_variants(feat: InputFeatures, interpret: bool) -> List[Variant]:
+    """Slot-compacted ragged variant with a per-call value scatter: the
+    block-ELL edge index maps each CSR edge to its (slot, r, c) cell, and
+    .add accumulates duplicates exactly like the segment-sum baseline."""
+    out = []
+    f_static = feat.f
+    for rb, bc in ((8, 8), (16, 8)):
+        def _prep(csr, rb=rb, bc=bc):
+            s_csr = csr.structural()
+            bell = csr_to_block_ell(s_csr, rb=rb, bc=bc)
+            rag = bell.to_ragged()
+            idx = block_ell_edge_index(s_csr, bell)
+            return {
+                "rb": rb,
+                "bc": bc,
+                "n_rows": csr.n_rows,
+                "n_col_blocks": bell.n_col_blocks,
+                "n_slots": int(rag.slot_vals.shape[0]),
+                "padding_frac": bell.padding_frac,
+                "blkptr": rag.blkptr,
+                "slot_rowblk": rag.slot_rowblk,
+                "slot_colblk": rag.slot_colblk,
+                "edge_slot": (
+                    rag.blkptr[idx["edge_blkrow"]] + idx["edge_slot"]
+                ).astype(np.int32),
+                "edge_r": idx["edge_r"],
+                "edge_c": idx["edge_c"],
+            }
+
+        def _build(aux, interpret=interpret, f_static=f_static):
+            from repro.kernels.spmm_pallas import spmm_ragged_ell
+
+            dev = _dev(aux)
+            rb, bc = aux["rb"], aux["bc"]
+            n = int(aux["n_rows"])
+            n_slots = int(aux["n_slots"])
+            padded_cols = aux["n_col_blocks"] * bc
+            pad_f_static = (-f_static) % 128
+
+            def run(vals, b):
+                f = b.shape[1]
+                pad_f = pad_f_static if f == f_static else (-f) % 128
+                bp = _pad_b(b, padded_cols - b.shape[0], pad_f)
+                slot_vals = (
+                    jnp.zeros((n_slots, rb, bc), jnp.float32)
+                    .at[dev["edge_slot"], dev["edge_r"], dev["edge_c"]]
+                    .add(vals.astype(jnp.float32))
+                )
+                o = spmm_ragged_ell(
+                    dev["blkptr"], dev["slot_rowblk"], dev["slot_colblk"],
+                    slot_vals, bp, f_tile=128, interpret=interpret,
+                )
+                return o[:n, :f]
+
+            return run
+
+        out.append(
+            Variant(
+                name="ragged_ell_pallas",
+                op=feat.op,
+                prepare=_prep,
+                build=_build,
+                applicable=lambda f, hw, rb=rb, bc=bc: f.f >= 32
+                and f.nnz * rb * bc * 4 <= 512_000_000,
+                knobs={"rb": rb, "bc": bc, "f_tile": 128, "ragged": True},
+            )
+        )
     return out
 
 
@@ -623,15 +761,25 @@ def candidates(
         on_tpu = jax.devices()[0].platform == "tpu"
         include_pallas = on_tpu or os.environ.get("AUTOSAGE_PROBE_PALLAS") == "1"
     interpret = jax.devices()[0].platform != "tpu"
-    if feat.op == "spmm":
+    # grad ops (core/autodiff.py) route through their structural compute
+    # kind: e.g. "spmm_bwd_b" draws SpMM candidates (it runs on the
+    # transposed CSR), "spmm_bwd_vals" draws SDDMM candidates. Ops with
+    # runtime (cotangent-dependent) sparse values get the dynamic-vals
+    # family, whose runners take (vals, b).
+    kind = op_kind(feat.op)
+    if kind == "spmm" and op_dynamic_vals(feat.op):
+        vs = _spmm_dyn_variants(feat)
+        if include_pallas:
+            vs += _pallas_spmm_dyn_variants(feat, interpret)
+    elif kind == "spmm":
         vs = _spmm_variants(feat)
         if include_pallas:
             vs += _pallas_spmm_variants(feat, interpret)
-    elif feat.op == "sddmm":
+    elif kind == "sddmm":
         vs = _sddmm_variants(feat)
         if include_pallas:
             vs += _pallas_sddmm_variants(feat, interpret)
-    elif feat.op == "attention":
+    elif kind == "attention":
         vs = _attention_variants(feat, include_pallas, interpret)
     else:
         raise KeyError(feat.op)

@@ -10,11 +10,24 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
+import jax
 import numpy as np
 
+
+def _warn_deprecated(old: str, new: str) -> None:
+    """One-time DeprecationWarning (Python's default filter dedups per
+    call site) pointing legacy call styles at the repro.api facade."""
+    warnings.warn(
+        f"{old} is deprecated; use {new} (see repro.api)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
 from repro.core import estimate as est
+from repro.core import features as features_mod
 from repro.core import probe as probe_mod
 from repro.core import registry
 from repro.core import telemetry
@@ -43,7 +56,17 @@ class ProbeOutcome:
 
 
 def default_probe_args(op: str, f: int, seed: int = 0) -> Callable[[CSR], tuple]:
-    """Random dense operands of width f, shaped for ``op``, per subgraph."""
+    """Random dense operands of width f, shaped for ``op``, per subgraph.
+
+    Grad ops route through their structural compute kind, so the slope
+    probe times cotangent-shaped operands: for "spmm_bwd_b" (an SpMM over
+    the transposed CSR) the operand is the (n_cols, F_grad) cotangent,
+    and dynamic-vals ops additionally get a random nnz-length value
+    vector standing in for the per-edge cotangent. The old forward-only
+    shapes silently probed the wrong F for grad-side decisions.
+    """
+    kind = features_mod.op_kind(op)
+    dynamic = features_mod.op_dynamic_vals(op)
 
     def fn(sub: CSR) -> tuple:
         # per-subgraph stream: the 1x and 2x slope-probe subgraphs share
@@ -51,13 +74,17 @@ def default_probe_args(op: str, f: int, seed: int = 0) -> Callable[[CSR], tuple]
         # operands and let the 2x probe read them out of a warm cache,
         # biasing the slope low
         rng = np.random.default_rng((seed, sub.n_rows, sub.nnz))
-        if op == "spmm":
-            return (rng.standard_normal((sub.n_cols, f)).astype(np.float32),)
-        if op == "sddmm":
+        if kind == "spmm":
+            args = (rng.standard_normal((sub.n_cols, f)).astype(np.float32),)
+            if dynamic:
+                vals = rng.standard_normal((sub.nnz,)).astype(np.float32)
+                return (vals,) + args
+            return args
+        if kind == "sddmm":
             x = rng.standard_normal((sub.n_rows, f)).astype(np.float32)
             y = rng.standard_normal((sub.n_cols, f)).astype(np.float32)
             return (x, y)
-        if op == "attention":
+        if kind == "attention":
             q = rng.standard_normal((sub.n_rows, f)).astype(np.float32)
             k = rng.standard_normal((sub.n_cols, f)).astype(np.float32)
             v = rng.standard_normal((sub.n_cols, f)).astype(np.float32)
@@ -355,8 +382,14 @@ class AutoSage:
         key = (graph_signature(csr), decision.op, decision.choice)
         runner = self._runners.pop(key, None)
         if runner is None:
-            aux = decision.variant.prepare(csr)
-            runner = decision.variant.build(aux)
+            # build_runner is reached from inside jit/grad traces (the
+            # custom_vjp fwd/bwd rules in core/autodiff.py decide at
+            # trace time). The prepared layout tables must be CONCRETE
+            # device arrays, not trace-scoped constants — a memoized
+            # runner closing over tracers poisons every later trace.
+            with jax.ensure_compile_time_eval():
+                aux = decision.variant.prepare(csr)
+                runner = decision.variant.build(aux)
             padding = {
                 k: float(v) for k, v in aux.items()
                 if k.endswith("padding_frac")
@@ -375,12 +408,17 @@ class AutoSage:
         return runner
 
     def spmm(self, csr: CSR, b, seed: int = 0):
-        """One-call convenience: decide + prepare + run (paper's
-        autosage::spmm_csr binding)."""
+        """Deprecated one-call convenience (paper's autosage::spmm_csr
+        binding). Use `repro.api.spmm(csr, b, sage=...)` — the facade is
+        keyword-consistent and differentiable; advanced callers needing
+        the Decision use `decide` + `build_runner` directly."""
+        _warn_deprecated("AutoSage.spmm", "repro.api.spmm(csr, b, sage=...)")
         d = self.decide(csr, int(b.shape[1]), "spmm", seed=seed)
         return self.build_runner(csr, d)(b), d
 
     def sddmm(self, csr: CSR, x, y, seed: int = 0):
+        """Deprecated; use `repro.api.sddmm(csr, x, y, sage=...)`."""
+        _warn_deprecated("AutoSage.sddmm", "repro.api.sddmm(csr, x, y, sage=...)")
         d = self.decide(csr, int(x.shape[1]), "sddmm", seed=seed)
         return self.build_runner(csr, d)(x, y), d
 
@@ -399,7 +437,10 @@ class AutoSage:
         )
 
     def attention(self, csr: CSR, q, k, v, seed: int = 0):
-        """One-call convenience: decide_attention + prepare + run."""
+        """Deprecated; use `repro.api.attention(csr, q, k, v, sage=...)`."""
+        _warn_deprecated(
+            "AutoSage.attention", "repro.api.attention(csr, q, k, v, sage=...)"
+        )
         from repro.core import pipeline
 
         return pipeline.attention_forward(self, csr, q, k, v, seed=seed)

@@ -4,9 +4,17 @@ One function per op; `impl` selects the Pallas TPU kernel (interpret=True
 on CPU for validation) or the XLA fallback. Oracles live in ref.py;
 preprocessing (CSR -> block-ELL) in sparse/bsr.py. The AutoSAGE scheduler
 (core/) picks among these via the variant registry.
+
+DEPRECATED as a call surface: the `impl="auto"` string dispatch predates
+the scheduler and bypasses it entirely (auto = "pallas on TPU else xla",
+input-oblivious). Use `repro.api.spmm/sddmm/attention` — scheduled,
+differentiable, keyword-consistent. These shims stay for kernel-level
+tests that pin a specific impl; a ruff TID251 rule bans new intra-repo
+imports outside repro/api.py and tests.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
@@ -26,10 +34,22 @@ def _interpret() -> bool:
     return jax.devices()[0].platform != "tpu"
 
 
+def _warn_deprecated(old: str, new: str) -> None:
+    # one-time per call site (Python's default filter dedups by location)
+    warnings.warn(
+        f"{old} is deprecated; use {new} (see repro.api)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 def spmm(csr: CSR, b: jax.Array, impl: str = "auto", rb: int = 8, bc: int = 8,
          f_tile: int = 128) -> jax.Array:
     """C = A @ B. impl: auto|pallas|ragged|xla (ragged = slot-compacted
-    Pallas kernel whose work scales with stored tiles, not ELL width)."""
+    Pallas kernel whose work scales with stored tiles, not ELL width).
+
+    Deprecated; use `repro.api.spmm(csr, b, sage=...)`."""
+    _warn_deprecated("kernels.ops.spmm", "repro.api.spmm(csr, b, sage=...)")
     if impl == "auto":
         impl = "pallas" if not _interpret() else "xla"
     if impl == "xla":
@@ -59,7 +79,10 @@ def spmm(csr: CSR, b: jax.Array, impl: str = "auto", rb: int = 8, bc: int = 8,
 def sddmm(csr: CSR, x: jax.Array, y: jax.Array, impl: str = "auto",
           rb: int = 8, bc: int = 8) -> jax.Array:
     """A~_ij = <X_i, Y_j> on S(A); returns CSR-ordered nnz values (xla)
-    or block-ELL tiles (pallas)."""
+    or block-ELL tiles (pallas).
+
+    Deprecated; use `repro.api.sddmm(csr, x, y, sage=...)`."""
+    _warn_deprecated("kernels.ops.sddmm", "repro.api.sddmm(csr, x, y, sage=...)")
     if impl == "auto":
         impl = "pallas" if not _interpret() else "xla"
     if impl == "xla":
@@ -83,7 +106,12 @@ def csr_attention(
     """The paper's pipeline (SDDMM -> row-softmax -> SpMM). impl=pallas
     uses the fused flash-style kernel (beyond-paper, one HBM pass);
     impl=ragged additionally compacts the slot grid so hub rows stop
-    inflating every row block's slot count."""
+    inflating every row block's slot count.
+
+    Deprecated; use `repro.api.attention(csr, q, k, v, sage=...)`."""
+    _warn_deprecated(
+        "kernels.ops.csr_attention", "repro.api.attention(csr, q, k, v, sage=...)"
+    )
     if impl == "auto":
         impl = "pallas" if not _interpret() else "xla"
     if impl == "xla":

@@ -75,6 +75,90 @@ def csr_attention_ref(
     return spmm_ref(rowptr, colind, probs, v)
 
 
+# ---- backward oracles (ground truth for core/autodiff.py) ------------
+# Closed-form VJPs of the forward oracles, written with the same
+# segment-op primitives. These are what tests/test_autodiff.py checks the
+# scheduled custom_vjp gradients against, and they document the math each
+# grad op lowers to: SpMM's backward is an SDDMM (grad w.r.t. vals) plus
+# a transposed SpMM (grad w.r.t. B) — expressed here as a segment-sum
+# over colind, which IS A^T @ grad without materializing the transpose.
+
+
+def spmm_bwd_ref(
+    rowptr: jax.Array,
+    colind: jax.Array,
+    val: Optional[jax.Array],
+    b: jax.Array,
+    grad_c: jax.Array,
+) -> tuple:
+    """VJP of spmm_ref w.r.t. (val, b): returns (grad_val[nnz], grad_b)."""
+    nnz = colind.shape[0]
+    rows = _row_ids(rowptr, nnz)
+    # dL/dval_ij = <grad_C_i, B_j>  (an SDDMM on the forward pattern)
+    grad_val = jnp.sum(grad_c[rows] * b[colind], axis=-1)
+    # dL/dB_j = sum_i val_ij * grad_C_i  (SpMM on the transposed CSR)
+    contrib = grad_c[rows]
+    if val is not None:
+        contrib = contrib * val[:, None].astype(grad_c.dtype)
+    grad_b = jax.ops.segment_sum(contrib, colind, num_segments=b.shape[0])
+    return grad_val, grad_b
+
+
+def sddmm_bwd_ref(
+    rowptr: jax.Array,
+    colind: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    grad_e: jax.Array,
+) -> tuple:
+    """VJP of sddmm_ref w.r.t. (x, y): two SpMMs whose sparse values are
+    the per-edge cotangent — one on A, one on A^T."""
+    nnz = colind.shape[0]
+    rows = _row_ids(rowptr, nnz)
+    g = grad_e[:, None].astype(x.dtype)
+    grad_x = jax.ops.segment_sum(g * y[colind], rows, num_segments=x.shape[0])
+    grad_y = jax.ops.segment_sum(g * x[rows], colind, num_segments=y.shape[0])
+    return grad_x, grad_y
+
+
+def row_softmax_bwd_ref(
+    rowptr: jax.Array,
+    colind: jax.Array,
+    probs: jax.Array,
+    grad_probs: jax.Array,
+) -> jax.Array:
+    """VJP of row_softmax_ref given its *output* probs: per row,
+    grad_logits = p * (grad_p - <p, grad_p>)."""
+    n_rows = rowptr.shape[0] - 1
+    nnz = colind.shape[0]
+    rows = _row_ids(rowptr, nnz)
+    tmp = probs * grad_probs
+    row_dot = jax.ops.segment_sum(tmp, rows, num_segments=n_rows)
+    return tmp - probs * row_dot[rows]
+
+
+def csr_attention_bwd_ref(
+    rowptr: jax.Array,
+    colind: jax.Array,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    grad_out: jax.Array,
+    scale: Optional[float] = None,
+) -> tuple:
+    """VJP of csr_attention_ref w.r.t. (q, k, v): recompute probs, then
+    compose spmm/sddmm/softmax backward pieces."""
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = sddmm_ref(rowptr, colind, q, k) * scale
+    probs = row_softmax_ref(rowptr, colind, logits)
+    # out = SpMM(A(probs), v): grads w.r.t. probs (per edge) and v
+    grad_probs, grad_v = spmm_bwd_ref(rowptr, colind, probs, v, grad_out)
+    grad_logits = row_softmax_bwd_ref(rowptr, colind, probs, grad_probs)
+    grad_q, grad_k = sddmm_bwd_ref(rowptr, colind, q, k, grad_logits * scale)
+    return grad_q, grad_k, grad_v
+
+
 # ---- block-ELL oracles (TPU-native format; DESIGN.md §2) -------------
 
 

@@ -13,10 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs.base import ArchConfig
 from repro.core.batch import BatchScheduler
 from repro.core.scheduler import AutoSage
-from repro.kernels import ref
 from repro.models.modules import dense_init
 from repro.sparse.csr import CSR
 
@@ -50,21 +50,20 @@ def sage_forward(
     sage: Optional[SchedulerLike] = None,
 ) -> jax.Array:
     """GraphSAGE forward; aggregation runs through the AutoSAGE scheduler
-    (per-graph or batched) when one is supplied, else the XLA baseline."""
+    (per-graph or batched) when one is supplied, else the XLA baseline.
+
+    Every aggregation goes through `repro.api.spmm`, so with a scheduler
+    the op is differentiable end-to-end: jax.grad through this forward
+    emits scheduled backward ops (op="spmm_bwd_b" on the memoized
+    transpose) with their own cache keys. Decisions and prepared runners
+    are memoized inside the scheduler, so the per-layer call costs one
+    dict hit after the first step (hidden layers share one F-keyed
+    decision; the head layer gets its own)."""
     a = _norm_csr(csr)
-    rowptr, colind = jnp.asarray(a.rowptr), jnp.asarray(a.colind)
-    val = jnp.asarray(a.val)
     n_layers = len(params["w_agg"])
-    runner = None
     for i in range(n_layers):
         h = x @ params["w_agg"][i]
-        if sage is not None:
-            if runner is None:
-                dec = sage.decide(a, int(h.shape[1]), "spmm")
-                runner = sage.build_runner(a, dec)
-            agg = runner(h)
-        else:
-            agg = ref.spmm_ref(rowptr, colind, val, h)
+        agg = api.spmm(a, h, sage=sage)
         x = agg.astype(x.dtype) + x @ params["w_self"][i]
         if i < n_layers - 1:
             x = jax.nn.relu(x)
@@ -91,13 +90,7 @@ def sage_minibatch_forward(
     """
     a = _norm_csr(sub)
     h = x_full @ params["w_agg"][0]
-    if sage is not None:
-        d = sage.decide(a, int(h.shape[1]), "spmm")
-        agg = sage.build_runner(a, d)(h)
-    else:
-        agg = ref.spmm_ref(
-            jnp.asarray(a.rowptr), jnp.asarray(a.colind), jnp.asarray(a.val), h
-        )
+    agg = api.spmm(a, h, sage=sage)
     xb = x_full[jnp.asarray(np.asarray(batch_rows))]
     out = agg.astype(xb.dtype) + xb @ params["w_self"][0]
     n_layers = len(params["w_agg"])
@@ -123,17 +116,13 @@ def gat_layer(
     """Dot-product graph attention = the paper's CSR-attention pipeline.
 
     With a scheduler supplied, the whole SDDMM -> softmax -> SpMM
-    composition goes through the pipeline-level decision
-    (`AutoSage.attention`), which picks between composed 3-kernel
-    candidates and the fused Pallas kernel per input; without one, the
-    XLA reference pipeline runs.
+    composition goes through the pipeline-level decision via
+    `repro.api.attention` (composed 3-kernel candidates vs the fused
+    Pallas kernel, per input) and is differentiable — the backward
+    decomposes into its own scheduled sparse ops (core/autodiff.py).
+    Without a scheduler, the XLA reference pipeline runs.
     """
     q = x @ params["wq"]
     k = x @ params["wk"]
     v = x @ params["wv"]
-    if sage is not None:
-        out, _ = sage.attention(csr, q, k, v)
-        return out.astype(x.dtype)
-    return ref.csr_attention_ref(
-        jnp.asarray(csr.rowptr), jnp.asarray(csr.colind), q, k, v
-    )
+    return api.attention(csr, q, k, v, sage=sage).astype(x.dtype)

@@ -108,7 +108,20 @@ class BlockELL:
         keeps at least one slot: an empty block gets a single all-zero
         dummy slot pointing at column-block 0, so the ragged grid still
         visits (and therefore initializes) every output row block.
+
+        Memoized per object: the registry's ragged variants and the
+        grad-op layout path (core/autodiff.py via registry dynamic
+        builders) both call this on the same BlockELL during one
+        decide + prepare sequence.
         """
+        memo = getattr(self, "_ragged_memo", None)
+        if memo is not None:
+            return memo
+        rag = self._to_ragged_uncached()
+        object.__setattr__(self, "_ragged_memo", rag)
+        return rag
+
+    def _to_ragged_uncached(self) -> "RaggedBlockELL":
         nrb, w = self.colblk.shape
         ns = self.nslots.astype(np.int64)
         if nrb == 0:

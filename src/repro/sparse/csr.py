@@ -8,9 +8,28 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
+
+# transposed-layout cache telemetry: "built" counts real O(nnz log nnz)
+# conversions, "hits" counts per-object memo or structure-cache reuse.
+# tests/test_autodiff.py asserts backward passes stop re-converting after
+# step 1; examples/train_gnn.py reports these per run.
+TRANSPOSE_STATS: Dict[str, int] = {"built": 0, "hits": 0}
+
+# process-level structure cache keyed by graph signature: training loops
+# rebuild CSR objects per step (e.g. models/gnn._norm_csr re-weights the
+# same structure), so a per-object memo alone would re-transpose each
+# step. Values are NOT cached here (the signature hashes structure only);
+# a hit replays the cached permutation over the caller's values.
+_TRANSPOSE_BY_SIG: Dict[str, tuple] = {}
+_TRANSPOSE_BY_SIG_CAP = 32
+
+
+def reset_transpose_stats() -> None:
+    TRANSPOSE_STATS["built"] = 0
+    TRANSPOSE_STATS["hits"] = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +108,78 @@ class CSR:
                 new_val[o_lo:o_hi] = self.val[lo:hi]
         return CSR(new_rowptr, new_colind, new_val, rows.shape[0], self.n_cols)
 
+
+    def structural(self) -> "CSR":
+        """Values-free view of this matrix (same rowptr/colind, val=None).
+
+        Memoized per object, and the view inherits the parent's graph
+        signature memo (signatures hash structure only), so schedulers
+        keyed on structure never re-hash. Ops whose sparse values are a
+        runtime operand (the `*_bwd_*` grad ops in core/autodiff.py)
+        build their layouts from this view.
+        """
+        if self.val is None:
+            return self
+        memo = getattr(self, "_structural_memo", None)
+        if memo is None:
+            memo = CSR(self.rowptr, self.colind, None, self.n_rows, self.n_cols)
+            object.__setattr__(memo, "_sig_memo", graph_signature(self))
+            dup = getattr(self, "_dup_memo", None)
+            if dup is not None:
+                object.__setattr__(memo, "_dup_memo", dup)
+            object.__setattr__(self, "_structural_memo", memo)
+        return memo
+
+    def transpose(self) -> "CSR":
+        """A^T as CSR (n_cols x n_rows); memoized — see transpose_with_perm."""
+        return self.transpose_with_perm()[0]
+
+    def transpose_with_perm(self) -> Tuple["CSR", np.ndarray]:
+        """(A^T, perm) where ``A^T.val == A.val[perm]`` edge-for-edge.
+
+        The backward pass of every scheduled op needs the transposed
+        layout (grad w.r.t. the dense operand of SpMM is A^T @ grad_C;
+        SDDMM grads scatter the cotangent through A and A^T), so this is
+        memoized twice over: per object, and per graph signature in a
+        bounded process-level cache whose entries hold structure + the
+        edge permutation only. A training step therefore pays the
+        O(nnz log nnz) conversion once per graph, not once per step —
+        `AutoSage.build_runner`'s runner memo then keys on the stable
+        transposed signature, so the backward kernel's prepared layout
+        is reused too. Duplicate edges stay distinct entries (SpMM
+        semantics accumulate them).
+        """
+        memo = getattr(self, "_transpose_memo", None)
+        if memo is not None:
+            TRANSPOSE_STATS["hits"] += 1
+            return memo
+        sig = graph_signature(self)
+        cached = _TRANSPOSE_BY_SIG.get(sig)
+        if cached is not None:
+            t_rowptr, t_colind, order, t_sig = cached
+            TRANSPOSE_STATS["hits"] += 1
+        else:
+            rows = np.repeat(
+                np.arange(self.n_rows, dtype=np.int64), self.degrees
+            )
+            # sort edges by (col, row): the transposed CSR order
+            order = np.lexsort((rows, self.colind)).astype(np.int64)
+            t_rowptr = np.zeros(self.n_cols + 1, dtype=np.int32)
+            np.add.at(t_rowptr[1:], self.colind, 1)
+            np.cumsum(t_rowptr, out=t_rowptr)
+            t_colind = rows[order].astype(np.int32)
+            t = CSR(t_rowptr, t_colind, None, self.n_cols, self.n_rows)
+            t_sig = graph_signature(t)
+            while len(_TRANSPOSE_BY_SIG) >= _TRANSPOSE_BY_SIG_CAP:
+                _TRANSPOSE_BY_SIG.pop(next(iter(_TRANSPOSE_BY_SIG)))
+            _TRANSPOSE_BY_SIG[sig] = (t_rowptr, t_colind, order, t_sig)
+            TRANSPOSE_STATS["built"] += 1
+        t_val = None if self.val is None else np.asarray(self.val)[order]
+        t = CSR(t_rowptr, t_colind, t_val, self.n_cols, self.n_rows)
+        object.__setattr__(t, "_sig_memo", t_sig)
+        memo = (t, order)
+        object.__setattr__(self, "_transpose_memo", memo)
+        return memo
 
     def has_duplicate_edges(self) -> bool:
         """True if some (row, col) pair is stored more than once.

@@ -1,0 +1,142 @@
+"""The repro.api facade: routing (reference / scheduled-forward /
+scheduled-differentiable), the lazy `repro.api` package attribute, and
+the one-time DeprecationWarning shims on the three legacy call styles."""
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.core import AutoSage, ScheduleCache
+from repro.kernels import ref
+from repro.sparse import power_law
+
+
+@pytest.fixture(scope="module")
+def sage():
+    return AutoSage(
+        cache=ScheduleCache(path=None), probe_iters=2, probe_cap_ms=200,
+        probe_frac=0.05,
+    )
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return power_law(250, 1.7, avg_deg=5.0, n_cols=180, seed=0)
+
+
+def _ops(graph, seed=0):
+    rng = np.random.default_rng(seed)
+    b = jnp.asarray(rng.standard_normal((graph.n_cols, 16)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((graph.n_rows, 16)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((graph.n_cols, 16)).astype(np.float32))
+    return b, x, y
+
+
+def test_package_entry_point():
+    import repro
+
+    assert repro.api is api
+    with pytest.raises(AttributeError):
+        repro.nope
+
+
+def test_spmm_routing(graph, sage):
+    b, _, _ = _ops(graph)
+    rowptr, colind = jnp.asarray(graph.rowptr), jnp.asarray(graph.colind)
+    val = None if graph.val is None else jnp.asarray(graph.val)
+    want = ref.spmm_ref(rowptr, colind, val, b)
+    # sage=None -> reference, exactly
+    np.testing.assert_array_equal(np.asarray(api.spmm(graph, b)), np.asarray(want))
+    # scheduled forward-only and scheduled differentiable agree with ref
+    for kw in ({"differentiable": False}, {}):
+        got = api.spmm(graph, b, sage=sage, **kw)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_sddmm_routing(graph, sage):
+    _, x, y = _ops(graph)
+    want = ref.sddmm_ref(jnp.asarray(graph.rowptr), jnp.asarray(graph.colind), x, y)
+    np.testing.assert_array_equal(np.asarray(api.sddmm(graph, x, y)), np.asarray(want))
+    got = api.sddmm(graph, x, y, sage=sage)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_attention_routing(sage):
+    g = power_law(150, 1.6, avg_deg=5.0, seed=1)  # square for attention
+    rng = np.random.default_rng(2)
+    d = 16
+    q = jnp.asarray(rng.standard_normal((g.n_rows, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((g.n_cols, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((g.n_cols, d)).astype(np.float32))
+    rowptr, colind = jnp.asarray(g.rowptr), jnp.asarray(g.colind)
+    want = ref.csr_attention_ref(rowptr, colind, q, k, v)
+    np.testing.assert_array_equal(
+        np.asarray(api.attention(g, q, k, v)), np.asarray(want)
+    )
+    got = api.attention(g, q, k, v, sage=sage)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-3, atol=5e-3)
+    # a custom scale bypasses the scheduled path (fused kernels bake the
+    # default) and still differentiates
+    want2 = ref.csr_attention_ref(rowptr, colind, q, k, v, scale=0.5)
+    got2 = api.attention(g, q, k, v, sage=sage, scale=0.5)
+    np.testing.assert_array_equal(np.asarray(got2), np.asarray(want2))
+    gq = jax.grad(lambda q: api.attention(g, q, k, v, sage=sage, scale=0.5).sum())(q)
+    assert np.isfinite(np.asarray(gq)).all()
+
+
+def test_keyword_only_options(graph, sage):
+    b, _, _ = _ops(graph)
+    with pytest.raises(TypeError):
+        api.spmm(graph, b, sage)  # scheduler must be keyword-only
+
+
+# ------------------------------------------------- deprecation shims
+def test_ops_layer_deprecated(graph):
+    from repro.kernels import ops
+
+    b, x, y = _ops(graph)
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        ops.spmm(graph, b, impl="xla")
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        ops.sddmm(graph, x, y, impl="xla")
+    sq = power_law(100, 1.6, avg_deg=4.0, seed=3)
+    q = jnp.asarray(np.random.default_rng(0).standard_normal((sq.n_rows, 8)).astype(np.float32))
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        ops.csr_attention(sq, q, q, q, impl="xla")
+
+
+def test_autosage_methods_deprecated(graph, sage):
+    b, x, y = _ops(graph)
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        out, d = sage.spmm(graph, b)
+    assert np.isfinite(np.asarray(out)).all() and d.op == "spmm"
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        sage.sddmm(graph, x, y)
+    sq = power_law(100, 1.6, avg_deg=4.0, seed=3)
+    q = jnp.asarray(np.random.default_rng(0).standard_normal((sq.n_rows, 8)).astype(np.float32))
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        sage.attention(sq, q, q, q)
+
+
+def test_deprecation_is_one_time_per_site():
+    """Python's default filter dedups DeprecationWarning per call site:
+    a training loop hitting a shim doesn't spam one warning per step."""
+    from repro.kernels import ops
+
+    g = power_law(60, 1.5, avg_deg=3.0, seed=4)
+    b = jnp.asarray(np.zeros((g.n_cols, 4), np.float32))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        ops.spmm(g, b, impl="xla")  # warm-up: jax's first-call filter churn
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("default")  # dedup-by-location semantics
+        for _ in range(3):
+            ops.spmm(g, b, impl="xla")
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
