@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import statistics
 import time
+from contextlib import contextmanager
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -1116,6 +1117,194 @@ def train_smoke(full: bool = False) -> List[Tuple]:
     return rows
 
 
+# --------------------------------------------------------- observability
+OUT_OBS = "results/obs"
+
+
+@contextmanager
+def _env_overlay(**updates):
+    """Set (str value) / unset (None) env vars around a child-worker leg,
+    always restoring — the obs tables flip AUTOSAGE_OBS between legs and
+    _run_shared_worker inherits the ambient environment."""
+    import os
+
+    old = {k: os.environ.get(k) for k in updates}
+    try:
+        for k, v in updates.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+        yield
+    finally:
+        for k, v in old.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+def _warm_decide_wall_ms(tmp: str, on: bool, tag: str, trials: int = 3,
+                         n_graphs: int = 32) -> float:
+    """Min warm decide-path wall (ms) over ``trials`` subprocess runs
+    against a pre-warmed private cache: every decide is a bucket-cache
+    hit, so the wall is the pure decide path the obs spans sit on."""
+    cache_p = f"{tmp}/oh_{tag}.json"
+    with _env_overlay(AUTOSAGE_OBS="1" if on else None,
+                      AUTOSAGE_OBS_DIR=f"{tmp}/oh_obs_{tag}"):
+        _run_shared_worker(cache_p, shared=False, seed=3, n_graphs=n_graphs)
+        return min(
+            _run_shared_worker(cache_p, shared=False, seed=3,
+                               n_graphs=n_graphs)["stats"]["decide_wall_ms"]
+            for _ in range(trials)
+        )
+
+
+def obs_smoke(full: bool = False) -> List[Tuple]:
+    """Seconds-fast CI gate on the flight recorder: a 2-worker fleet run
+    with AUTOSAGE_OBS=1 must drop a loadable Perfetto trace covering the
+    decision procedure (>= 6 distinct span names, incl. cache.lock_wait
+    and transfer), a parseable Prometheus snapshot with the headline
+    series, and an `obs_cli explain` narrative for a pinned bucket that
+    names its tier and chosen candidate; the same traffic with obs unset
+    must create ZERO obs files and keep replay bit-exact; and the warm
+    decide path with obs on must stay within 5% of obs off."""
+    del full
+    import json as _json
+    import tempfile
+    from pathlib import Path as _Path
+
+    from repro import obs_cli
+    from repro.core import obs
+
+    with tempfile.TemporaryDirectory() as tmp:
+        obs_dir = f"{tmp}/obs"
+        off_dir = f"{tmp}/obs_off"
+        shared_path = f"{tmp}/shared.json"
+
+        # --- obs ON: 2-worker fleet over one merge-on-flush cache ------
+        with _env_overlay(AUTOSAGE_OBS="1", AUTOSAGE_OBS_DIR=obs_dir):
+            for w in range(2):
+                _run_shared_worker(shared_path, shared=True, seed=w)
+        obs.export_trace(f"{tmp}/trace_merged.json", directory=obs_dir)
+        trace = _json.load(open(f"{tmp}/trace_merged.json"))
+        names = {e["name"] for e in trace["traceEvents"]}
+        assert len(names) >= 6, names
+        assert "cache.lock_wait" in names and "transfer" in names, names
+        prom = "".join(
+            p.read_text() for p in _Path(obs_dir).glob("metrics_*.prom")
+        )
+        for series in ("autosage_decides_total", "autosage_probe_ms_bucket",
+                       "autosage_est_abs_err_ms"):
+            assert series in prom, f"missing Prometheus series: {series}"
+
+        # --- explain: a pinned bucket names its tier + candidate -------
+        cache = _json.load(open(shared_path))
+        key = next(k for k in sorted(cache) if k.startswith("bucket|"))
+        text = obs_cli.explain(key, cache_path=shared_path)
+        assert "tier:" in text and any(
+            t in text for t in ("probe", "transfer", "drift")
+        ), text
+        assert cache[key]["choice"] in text, text
+
+        # --- obs OFF: zero files, replay still bit-exact ---------------
+        with _env_overlay(AUTOSAGE_OBS=None, AUTOSAGE_OBS_DIR=off_dir,
+                          AUTOSAGE_TELEMETRY_DIR=None):
+            r1 = _run_shared_worker(shared_path, shared=False, seed=0,
+                                    replay=True)
+            r2 = _run_shared_worker(shared_path, shared=False, seed=0,
+                                    replay=True)
+        assert r1["stats"]["probes_run"] == 0, r1["stats"]
+        assert r1["trace_choices"] == r2["trace_choices"]
+        assert not _Path(off_dir).exists(), "obs wrote files while off"
+
+        # --- overhead: warm decide path, min-of-3, re-measure on noise -
+        off_ms = _warm_decide_wall_ms(tmp, on=False, tag="off")
+        on_ms = _warm_decide_wall_ms(tmp, on=True, tag="on")
+        for _ in range(2):
+            if on_ms <= off_ms * 1.05 + 0.25:
+                break
+            off_ms = min(off_ms, _warm_decide_wall_ms(tmp, False, "off"))
+            on_ms = min(on_ms, _warm_decide_wall_ms(tmp, True, "on"))
+        assert on_ms <= off_ms * 1.05 + 0.25, (
+            f"obs decide-path overhead: on={on_ms:.3f}ms off={off_ms:.3f}ms"
+        )
+
+    overhead_pct = (on_ms / off_ms - 1.0) * 100 if off_ms else 0.0
+    rows = [
+        ("trace_spans", len(names), ",".join(sorted(names))),
+        ("decide_wall_obs_off_ms", round(off_ms, 3), "-"),
+        ("decide_wall_obs_on_ms", round(on_ms, 3),
+         f"overhead={overhead_pct:.1f}%"),
+    ]
+    for name, val, note in rows:
+        print(f"  [obs-smoke] {name:24s} {val!s:>8s} {note}")
+    write_csv(f"{OUT}/obs_smoke.csv", ["metric", "value", "note"], rows)
+    return rows
+
+
+def obs_overhead(full: bool = False) -> List[Tuple]:
+    """Nightly flight-recorder overhead + artifact drop: measures the
+    warm decide path obs-off vs obs-on over more trials than the smoke
+    gate, runs a fleet leg with obs on, and publishes the merged
+    Perfetto trace, Prometheus snapshot, and fleet summary under
+    results/obs/ (uploaded by the nightly workflow)."""
+    import json as _json
+    import shutil
+    import tempfile
+    from pathlib import Path as _Path
+
+    from repro import obs_cli
+    from repro.core import obs
+
+    n_workers = 4 if full else 2
+    n_graphs = 64 if full else 32
+    trials = 5 if full else 3
+    out = _Path(OUT_OBS)
+    out.mkdir(parents=True, exist_ok=True)
+    with tempfile.TemporaryDirectory() as tmp:
+        obs_dir = f"{tmp}/obs"
+        shared_path = f"{tmp}/shared.json"
+        with _env_overlay(AUTOSAGE_OBS="1", AUTOSAGE_OBS_DIR=obs_dir):
+            for w in range(n_workers):
+                _run_shared_worker(shared_path, shared=True, seed=w,
+                                   n_graphs=n_graphs)
+        trace = obs.export_trace(str(out / "trace_merged.json"),
+                                 directory=obs_dir)
+        names = {e["name"] for e in trace["traceEvents"]}
+        proms = sorted(_Path(obs_dir).glob("metrics_*.prom"))
+        (out / "metrics.prom").write_text(
+            "".join(p.read_text() for p in proms)
+        )
+        for p in _Path(obs_dir).glob("metrics_*.json"):
+            shutil.copy(p, out / p.name)
+        (out / "summary.txt").write_text(obs_cli.summary(obs_dir) + "\n")
+
+        off_ms = _warm_decide_wall_ms(tmp, on=False, tag="off",
+                                      trials=trials, n_graphs=n_graphs)
+        on_ms = _warm_decide_wall_ms(tmp, on=True, tag="on",
+                                     trials=trials, n_graphs=n_graphs)
+
+    overhead_pct = (on_ms / off_ms - 1.0) * 100 if off_ms else 0.0
+    snap = _json.loads((out / proms[0].name.replace(".prom", ".json"))
+                       .read_text()) if proms else {}
+    n_est_pairs = sum(
+        r["value"]
+        for r in snap.get("counters", {}).get("autosage_est_pairs_total", [])
+    )
+    rows = [
+        ("fleet_workers", n_workers, f"spans={len(names)}"),
+        ("decide_wall_obs_off_ms", round(off_ms, 3), "-"),
+        ("decide_wall_obs_on_ms", round(on_ms, 3),
+         f"overhead={overhead_pct:.1f}%"),
+        ("scorecard_pairs_worker0", int(n_est_pairs), "-"),
+    ]
+    for name, val, note in rows:
+        print(f"  [obs-overhead] {name:24s} {val!s:>8s} {note}")
+    write_csv(f"{OUT}/obs_overhead.csv", ["metric", "value", "note"], rows)
+    return rows
+
+
 ALL_TABLES = {
     "table2_7_reddit": table_reddit,
     "table3_8_products": table_products,
@@ -1131,6 +1320,7 @@ ALL_TABLES = {
     "shared_cache": shared_cache,
     "portability": portability,
     "train_step": train_step,
+    "obs_overhead": obs_overhead,
 }
 
 # run only via --smoke (CI) or --only <name>; not part of the default sweep
@@ -1141,4 +1331,5 @@ SMOKE_TABLES = {
     "shared_smoke": shared_smoke,
     "portability_smoke": portability_smoke,
     "train_smoke": train_smoke,
+    "obs_smoke": obs_smoke,
 }

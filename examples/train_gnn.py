@@ -194,6 +194,27 @@ def train_fleet(args):
     )
 
 
+def finish_obs(args):
+    """--obs epilogue: flush the flight-recorder artifacts and print the
+    end-of-run metrics summary + estimate-accuracy scorecard (mean abs
+    estimate error per op family). In fleet mode each worker flushes its
+    own metrics_<pid> snapshot; aggregate them afterwards with
+    `python -m repro.obs_cli summary`."""
+    if not args.obs:
+        return
+    from repro.core import obs
+
+    paths = obs.flush(force=True)
+    print()
+    print(obs.summary_text())
+    if paths.get("trace"):
+        print(
+            f"[obs] artifacts in {os.path.dirname(paths['trace'])} "
+            "(trace_*.json opens in ui.perfetto.dev; "
+            "python -m repro.obs_cli summary/explain reads the rest)"
+        )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--epochs", type=int, default=30)
@@ -210,14 +231,24 @@ def main():
     ap.add_argument("--shared", action="store_true",
                     help="merge-on-flush shared cache "
                          "(set automatically in fleet workers)")
+    ap.add_argument("--obs", action="store_true",
+                    help="flight recorder: sets AUTOSAGE_OBS=1 (spans + "
+                         "metrics + scorecard) and prints the end-of-run "
+                         "summary; artifacts land in AUTOSAGE_OBS_DIR "
+                         "(default results/obs)")
     ap.add_argument("--worker-id", type=int, default=0, help=argparse.SUPPRESS)
     ap.add_argument("--stats-json", default="", help=argparse.SUPPRESS)
     args = ap.parse_args()
+
+    if args.obs:
+        # before any decide: fleet workers inherit it through the env
+        os.environ["AUTOSAGE_OBS"] = "1"
 
     if args.workers:
         if not args.minibatch:
             args.minibatch = 1024
         train_fleet(args)
+        finish_obs(args)
         return
 
     cfg = get_config("gnn_sage")
@@ -229,6 +260,7 @@ def main():
         train_minibatch(args, cfg, graph, x, y, classes, in_dim)
     else:
         train_full(args, cfg, graph, x, y, classes, in_dim)
+    finish_obs(args)
 
 
 if __name__ == "__main__":

@@ -12,6 +12,13 @@ from repro.core.features import (
     features_from_neutral,
     waste_bin,
 )
+from repro.core.obs import (
+    REGISTRY,
+    MetricsRegistry,
+    ScopedCounter,
+    scorecard,
+    span,
+)
 from repro.core.transfer import TransferPlan, best_plan, plan_transfer
 from repro.core.scheduler import AutoSage, Decision, ProbeOutcome
 from repro.core.cache import (
@@ -34,9 +41,12 @@ __all__ = [
     "Decision",
     "HardwareSpec",
     "InputFeatures",
+    "MetricsRegistry",
     "ProbeOutcome",
+    "REGISTRY",
     "ScheduleBucket",
     "ScheduleCache",
+    "ScopedCounter",
     "ReplayMiss",
     "TransferPlan",
     "apply_guardrail",
@@ -46,5 +56,7 @@ __all__ = [
     "features_from_neutral",
     "parse_key",
     "plan_transfer",
+    "scorecard",
+    "span",
     "waste_bin",
 ]

@@ -29,6 +29,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import obs
 from repro.kernels import ref
 from repro.sparse.csr import CSR
 
@@ -42,9 +43,19 @@ def _decide(sched, csr: CSR, f: int, op: str):
 
 
 def _scheduled(sched, csr: CSR, f: int, op: str, *args):
-    """decide + (memoized) prepare + run one scheduled op."""
-    d = _decide(sched, csr, int(f), op)
-    return sched.build_runner(csr, d)(*args)
+    """decide + (memoized) prepare + run one scheduled op.
+
+    The obs spans here are host-side: under jit they cover trace time
+    (decide + prepare + dispatch of the traced runner), which is exactly
+    the scheduler-overhead story the flight recorder exists to audit —
+    steady-state device time is the probe/benchmark layer's job.
+    """
+    kind = "bwd" if "_bwd" in op else "fwd"
+    with obs.span(f"{kind}.{op}", op=op):
+        d = _decide(sched, csr, int(f), op)
+        runner = sched.build_runner(csr, d)
+        with obs.span("run", op=op, choice=d.choice):
+            return runner(*args)
 
 
 # ----------------------------------------------------------------- SpMM

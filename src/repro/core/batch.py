@@ -59,12 +59,14 @@ Entry points mirror the per-graph scheduler (`decide` / `build_runner` /
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 import time
 import zlib
 from typing import Any, Callable, Dict, List, Optional, Union
 
+from repro.core import obs
 from repro.core import registry, telemetry
 from repro.core import transfer as transfer_mod
 from repro.core.cache import ScheduleCache
@@ -213,18 +215,68 @@ class BatchScheduler:
         self.last_bucket: Optional[ScheduleBucket] = None
         self.probe_spent_ms = 0.0
         self.trace: List[Dict[str, Any]] = []
-        self._decides = 0
-        self._probe_passes = 0
+        # One accounting path (core/obs.py): every stream counter is a
+        # ScopedCounter — the instance-local .value backs stats() exactly
+        # as the old plain ints did, and each inc also lands on the named
+        # process-wide registry series, so Prometheus snapshots aggregate
+        # across scheduler instances without a second bookkeeping path.
+        # Bucket probe passes get their own metric name: the inner
+        # AutoSage.decide already counts real probe passes under
+        # autosage_probe_passes_total, and a bucket pass can be satisfied
+        # probe-free by an exact-key hit.
+        self._decides = obs.ScopedCounter("autosage_decides_total")
+        self._probe_passes = obs.ScopedCounter(
+            "autosage_bucket_probe_passes_total"
+        )
         self._decide_wall_ms = 0.0
-        self._warm_opens = 0  # buckets opened final from the (shared) cache
-        self.drift_flags = 0
-        self.drift_reprobes = 0
-        self.drift_flips = 0
+        # buckets opened final from the (shared) cache
+        self._warm_opens = obs.ScopedCounter(
+            "autosage_bucket_warm_opens_total"
+        )
+        self._drift_flags = obs.ScopedCounter("autosage_drift_events_total")
+        self._drift_reprobes = obs.ScopedCounter("autosage_drift_events_total")
+        self._drift_flips = obs.ScopedCounter("autosage_drift_events_total")
         # cross-device transfer accounting (core/transfer.py)
-        self.transfers = 0  # buckets opened from a peer device's ranking
-        self.transfers_confirmed = 0  # probe-free accepts + probe-confirmed
-        self.transfers_flipped = 0  # confirm probe disagreed
-        self.transfer_probe_free = 0  # confident accepts (zero probes paid)
+        self._transfers = obs.ScopedCounter("autosage_transfers_total")
+        self._transfers_confirmed = obs.ScopedCounter(
+            "autosage_transfer_verdict_total"
+        )
+        self._transfers_flipped = obs.ScopedCounter(
+            "autosage_transfer_verdict_total"
+        )
+        self._transfer_probe_free = obs.ScopedCounter(
+            "autosage_transfer_probe_free_total"
+        )
+
+    # counter views: the names tests/benchmarks read (`bs.transfers`,
+    # `bs.drift_flags`, ...) stay plain ints backed by the registry path
+    @property
+    def drift_flags(self) -> int:
+        return self._drift_flags.value
+
+    @property
+    def drift_reprobes(self) -> int:
+        return self._drift_reprobes.value
+
+    @property
+    def drift_flips(self) -> int:
+        return self._drift_flips.value
+
+    @property
+    def transfers(self) -> int:
+        return self._transfers.value
+
+    @property
+    def transfers_confirmed(self) -> int:
+        return self._transfers_confirmed.value
+
+    @property
+    def transfers_flipped(self) -> int:
+        return self._transfers_flipped.value
+
+    @property
+    def transfer_probe_free(self) -> int:
+        return self._transfer_probe_free.value
 
     # ---------------------------------------------------------- decide
     def decide(self, csr: CSR, f: int, op: str) -> Decision:
@@ -232,54 +284,60 @@ class BatchScheduler:
         probing is pulled from the shared budget (at most
         `max_probes_per_decide` bucket probes per call)."""
         t0 = time.perf_counter()
-        feat = InputFeatures.from_csr(csr, f, op)
-        bucket = ScheduleBucket.from_features(feat, self._device)
-        key = ScheduleCache.bucket_key(
-            self._device, bucket.sig(), f, op, self.sage.alpha
-        )
-        st = self._buckets.get(key)
-        if st is None:
-            if (
-                self.cache.shared and not self.cache.replay_only
-                and not self.cache.contains(key)
+        with obs.span("decide", op=op, f=f, scheduler="batch"):
+            with obs.span("features", op=op):
+                feat = InputFeatures.from_csr(csr, f, op)
+            bucket = ScheduleBucket.from_features(feat, self._device)
+            key = ScheduleCache.bucket_key(
+                self._device, bucket.sig(), f, op, self.sage.alpha
+            )
+            st = self._buckets.get(key)
+            if st is None:
+                if (
+                    self.cache.shared and not self.cache.replay_only
+                    and not self.cache.contains(key)
+                ):
+                    # a fleet peer may have probed this bucket since we
+                    # loaded: one cheap mtime stat before paying a probe.
+                    # Never in replay mode — replay serves the file AS
+                    # LOADED or two replays of one stream could differ
+                    self.cache.maybe_reload()
+                st = self._open_bucket(bucket, key, csr, feat)
+                self._buckets[key] = st
+                self._by_bucket[bucket] = st
+            st.hits += 1
+            st.last_csr, st.last_feat = csr, feat
+            self.last_bucket = bucket
+            self._check_waste_drift(st, feat)
+            if self.auto_pump and not self.cache.replay_only:
+                self.pump(self.max_probes_per_decide)
+            d = st.current()
+            if st.probed and st.decision is not None and st.decision.from_cache:
+                source = "bucket-cache"
+            elif (
+                st.probed and st.decision is not None
+                and st.decision.transfer is not None
+                and not st.decision.probe_ms
             ):
-                # a fleet peer may have probed this bucket since we
-                # loaded: one cheap mtime stat before paying a probe.
-                # Never in replay mode — replay serves the file AS LOADED
-                # or two replays of one stream could differ
-                self.cache.maybe_reload()
-            st = self._open_bucket(bucket, key, csr, feat)
-            self._buckets[key] = st
-            self._by_bucket[bucket] = st
-        st.hits += 1
-        st.last_csr, st.last_feat = csr, feat
-        self.last_bucket = bucket
-        self._decides += 1
-        self._check_waste_drift(st, feat)
-        if self.auto_pump and not self.cache.replay_only:
-            self.pump(self.max_probes_per_decide)
-        d = st.current()
-        if st.probed and st.decision is not None and st.decision.from_cache:
-            source = "bucket-cache"
-        elif (
-            st.probed and st.decision is not None
-            and st.decision.transfer is not None and not st.decision.probe_ms
-        ):
-            # confident cross-device transfer: final without a local probe
-            source = "transfer"
-        elif st.probed:
-            source = "probe"
-        elif st.transferred and st.transfer_verdict == "pending":
-            # transferred choice serving while its confirm probe waits on
-            # the budget
-            source = "transfer-pending"
-        elif st.decision is not None:
-            # flagged bucket awaiting its re-probe: still serves the last
-            # pinned decision, not the provisional baseline
-            source = "drift-pending"
-        else:
-            source = "provisional"
-        self._decide_wall_ms += (time.perf_counter() - t0) * 1e3
+                # confident cross-device transfer: final, no local probe
+                source = "transfer"
+            elif st.probed:
+                source = "probe"
+            elif st.transferred and st.transfer_verdict == "pending":
+                # transferred choice serving while its confirm probe waits
+                # on the budget
+                source = "transfer-pending"
+            elif st.decision is not None:
+                # flagged bucket awaiting its re-probe: still serves the
+                # last pinned decision, not the provisional baseline
+                source = "drift-pending"
+            else:
+                source = "provisional"
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        self._decide_wall_ms += wall_ms
+        obs.REGISTRY.observe(
+            "autosage_decide_ms", wall_ms, op=op, scheduler="batch"
+        )
         self._record(st, d, source)
         return d
 
@@ -327,7 +385,7 @@ class BatchScheduler:
                 guardrail=None, from_cache=True, probe_ms={},
                 probe_overhead_ms=0.0, probe_iter_ms=0.0, estimates_ms={},
             )
-            self._warm_opens += 1
+            self._warm_opens.inc(op=feat.op)
             stats = cached.get("stats") or {}
             return _BucketState(
                 bucket=bucket, key=key, rep_csr=csr, rep_feat=feat, base=base,
@@ -395,11 +453,15 @@ class BatchScheduler:
                 # the padding regime the transfer was accepted under: the
                 # waste-drift detector fires off it like off a probe's
                 st.waste_at_probe = feat.padding_waste
-                self.transfers += 1
+                self._transfers.inc(op=feat.op)
                 if plan.confident:
                     st.probed = True  # final: the confirm probe is waived
-                    self.transfers_confirmed += 1
-                    self.transfer_probe_free += 1
+                    self._transfers_confirmed.inc(verdict="confirmed")
+                    self._transfer_probe_free.inc(op=feat.op)
+                else:
+                    obs.REGISTRY.inc(
+                        "autosage_transfer_verdict_total", verdict="pending"
+                    )
                 telemetry.emit_batch_event(
                     {
                         "event": "transfer",
@@ -462,12 +524,21 @@ class BatchScheduler:
             # first re-probe measures under fresh probe RNG (reprobes is
             # 0 until here — seed would repeat the original probe's)
             st.reprobes += 1
-            self.drift_reprobes += 1
+            self._drift_reprobes.inc(event="reprobe")
         was_pending_transfer = (
             st.transferred and st.transfer_verdict == "pending"
         )
         seed = self._bucket_seed(st) + st.reprobes
-        with self.cache:  # defer flushing: exact + bucket puts -> one write
+        reprobe_span = (
+            obs.span(
+                "drift.reprobe", bucket=st.bucket.sig(), op=st.rep_feat.op,
+                reason=st.drift_reason,
+            )
+            if was_drift
+            else contextlib.nullcontext()
+        )
+        # defer flushing inside: exact + bucket puts -> one write
+        with reprobe_span, self.cache:
             # allow_transfer=False: this IS the measurement that confirms
             # (or flips) a transferred choice and re-pins drifted buckets
             # — an estimate-space shortcut here would be circular
@@ -485,9 +556,9 @@ class BatchScheduler:
                     "confirmed" if d.choice == st.transfer_choice else "flipped"
                 )
                 if st.transfer_verdict == "confirmed":
-                    self.transfers_confirmed += 1
+                    self._transfers_confirmed.inc(verdict="confirmed")
                 else:
-                    self.transfers_flipped += 1
+                    self._transfers_flipped.inc(verdict="flipped")
                 if st.transfer_info is not None:
                     st.transfer_info = dict(
                         st.transfer_info, verdict=st.transfer_verdict
@@ -507,10 +578,10 @@ class BatchScheduler:
             self._push_stats(st)
         st.probe_charge_ms = d.probe_overhead_ms  # 0 on an exact-key hit
         self.probe_spent_ms += st.probe_charge_ms
-        self._probe_passes += 1
+        self._probe_passes.inc(op=st.rep_feat.op)
         flipped = was_drift and old_choice is not None and d.choice != old_choice
         if flipped:
-            self.drift_flips += 1
+            self._drift_flips.inc(event="flip")
         event = {
             "event": "drift_reprobe" if was_drift else "bucket_probe",
             "bucket": st.bucket.sig(),
@@ -580,6 +651,18 @@ class BatchScheduler:
             runtime_ms if st.ewma_ms is None
             else st.ewma_ms + beta * (runtime_ms - st.ewma_ms)
         )
+        # estimate-accuracy scorecard: every observed runtime of a probed
+        # decision scores its roofline estimate against live ground truth
+        # (warm-opened buckets carry no estimates and feed nothing)
+        d = st.decision
+        if st.probed and d is not None and st.estimates_ms:
+            est_name = (
+                st.base.full_name() if d.choice == "baseline" else d.choice
+            )
+            obs.record_estimate(
+                st.bucket.op, d.choice, st.estimates_ms.get(est_name),
+                runtime_ms, source="observe",
+            )
         if st.ref_ms is None:
             # calibrate the drift reference from the first min_obs
             # observations delivered by the freshly probed decision
@@ -642,7 +725,7 @@ class BatchScheduler:
         st.drift_flagged = True
         st.probed = False
         st.drift_reason = reason
-        self.drift_flags += 1
+        self._drift_flags.inc(event="flag")
         telemetry.emit_batch_event(
             {
                 "event": "drift_flag",
@@ -744,17 +827,17 @@ class BatchScheduler:
     # ------------------------------------------------------------ stats
     def stats(self) -> Dict[str, Any]:
         return {
-            "decides": self._decides,
+            "decides": self._decides.value,
             "buckets": len(self._buckets),
-            "probes_run": self._probe_passes,
-            "probes_avoided": self._decides - self._probe_passes,
+            "probes_run": self._probe_passes.value,
+            "probes_avoided": self._decides.value - self._probe_passes.value,
             "probe_spent_ms": round(self.probe_spent_ms, 3),
             "probe_budget_ms": self.probe_budget_ms,
             "decide_wall_ms": round(self._decide_wall_ms, 3),
             "pending_buckets": len(self.pending()),
             # fleet sharing: buckets opened final from a (shared) cache,
             # i.e. probes another process (or a previous run) paid for
-            "warm_cache_opens": self._warm_opens,
+            "warm_cache_opens": self._warm_opens.value,
             "drift_flags": self.drift_flags,
             "drift_reprobes": self.drift_reprobes,
             "drift_flips": self.drift_flips,
@@ -807,8 +890,11 @@ class BatchScheduler:
         return rows
 
     def _record(self, st: _BucketState, d: Decision, source: str) -> None:
+        # the one place stream decides are counted: instance total for
+        # stats(), op/tier-labelled registry series for the exporters
+        self._decides.inc(op=d.op, tier=source, scheduler="batch")
         event = {
-            "i": self._decides - 1,
+            "i": self._decides.value - 1,
             "bucket": st.bucket.sig(),
             "key": st.key,
             "op": d.op,

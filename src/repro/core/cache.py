@@ -47,6 +47,8 @@ import time
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
+from repro.core import obs
+
 DEFAULT_PATH = os.environ.get("AUTOSAGE_CACHE", "autosage_cache.json")
 
 # entry schema: 1 = per-op decisions (choice/probe_ms/estimates_ms);
@@ -476,27 +478,39 @@ class ScheduleCache:
         """Load-merge-write transaction: reload the on-disk state (peers
         may have flushed since), merge the local state in, write back
         atomically — all under the lockfile, so no flush loses entries."""
-        lockfile = self._acquire_lock()
+        t_lock0 = time.perf_counter()
+        with obs.span("cache.lock_wait", path=str(self.path)):
+            lockfile = self._acquire_lock()
+        obs.REGISTRY.observe(
+            "autosage_cache_lock_wait_ms",
+            (time.perf_counter() - t_lock0) * 1e3,
+        )
         try:
-            disk: Dict[str, Any] = {}
-            if self.path.exists():
-                try:
-                    with open(self.path) as f:
-                        raw = json.load(f)
-                    if isinstance(raw, dict):
-                        disk = {
-                            k: (_normalize_entry(v) if isinstance(v, dict) else v)
-                            for k, v in raw.items()
-                        }
-                except (ValueError, UnicodeDecodeError):
-                    disk = {}  # corrupt on-disk state: local wins wholesale
-            self._data = self._merge(disk, self._data)
-            self._write_atomic()
-            # only a landed write consumes the deltas: a failed write
-            # (ENOSPC, EIO) must leave the cache dirty and the hit deltas
-            # pending so the next flush retries the merge
-            self._pending_hits.clear()
-            self._dirty = False
+            t_merge0 = time.perf_counter()
+            with obs.span("cache.merge", path=str(self.path)):
+                disk: Dict[str, Any] = {}
+                if self.path.exists():
+                    try:
+                        with open(self.path) as f:
+                            raw = json.load(f)
+                        if isinstance(raw, dict):
+                            disk = {
+                                k: (_normalize_entry(v) if isinstance(v, dict) else v)
+                                for k, v in raw.items()
+                            }
+                    except (ValueError, UnicodeDecodeError):
+                        disk = {}  # corrupt on-disk state: local wins wholesale
+                self._data = self._merge(disk, self._data)
+                self._write_atomic()
+                # only a landed write consumes the deltas: a failed write
+                # (ENOSPC, EIO) must leave the cache dirty and the hit
+                # deltas pending so the next flush retries the merge
+                self._pending_hits.clear()
+                self._dirty = False
+            obs.REGISTRY.observe(
+                "autosage_cache_merge_ms",
+                (time.perf_counter() - t_merge0) * 1e3,
+            )
         finally:
             self._release_lock(lockfile)
 

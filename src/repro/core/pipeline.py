@@ -27,11 +27,13 @@ benchmarks/tables.py run through them.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import obs
 from repro.core import probe as probe_mod
 from repro.core import registry, telemetry
 from repro.core import transfer as transfer_mod
@@ -78,7 +80,33 @@ def decide_attention(
     Like the per-op decide, an exact-key miss consults peer device
     classes' probed rankings first (core/transfer.py) — a confident
     re-rank under the local roofline skips the end-to-end probe."""
-    feat = InputFeatures.from_csr(csr, d, "attention")
+    t0 = time.perf_counter()
+    with obs.span("decide", op="attention", f=d, scheduler="exact"):
+        decision, tier = _decide_attention_impl(
+            sage, csr, d, seed=seed, stage_breakdown=stage_breakdown,
+            allow_transfer=allow_transfer,
+        )
+    obs.REGISTRY.inc(
+        "autosage_decides_total", op="attention", tier=tier, scheduler="exact"
+    )
+    obs.REGISTRY.observe(
+        "autosage_decide_ms", (time.perf_counter() - t0) * 1e3,
+        op="attention", scheduler="exact",
+    )
+    return decision
+
+
+def _decide_attention_impl(
+    sage: AutoSage,
+    csr: CSR,
+    d: int,
+    seed: int = 0,
+    stage_breakdown: bool = False,
+    allow_transfer: bool = True,
+) -> tuple:
+    """decide_attention body; returns (decision, accounting tier)."""
+    with obs.span("features", op="attention"):
+        feat = InputFeatures.from_csr(csr, d, "attention")
     key = ScheduleCache.key(device_sig(), feat.graph_sig, d, "attention", sage.alpha)
 
     cands = registry.candidates(feat, sage.hw)
@@ -96,7 +124,7 @@ def decide_attention(
             stage_ms=dict(cached.get("stage_ms", {})),
         )
         telemetry.emit_attention_decision(decision)
-        return decision
+        return decision, "cache"
 
     estimates, short = sage.shortlist(feat, cands)
     plan = None
@@ -117,19 +145,31 @@ def decide_attention(
             transfer=plan.provenance("confirmed"),
         )
         sage.cache.put(key, entry_with_stats(decision, feat, base.full_name()))
+        obs.REGISTRY.inc("autosage_transfer_verdict_total", verdict="confirmed")
         telemetry.emit_decide_event(decision, feat, kind="transfer")
         telemetry.emit_attention_decision(decision)
-        return decision
+        return decision, "transfer"
     if short:
-        outcome = sage.probe_candidates(
-            csr, base, short, default_probe_args("attention", d, seed), seed=seed
+        with obs.span("probe", op="attention", n_candidates=len(short) + 1):
+            outcome = sage.probe_candidates(
+                csr, base, short, default_probe_args("attention", d, seed),
+                seed=seed,
+            )
+        obs.REGISTRY.inc("autosage_probe_passes_total", op="attention")
+        obs.REGISTRY.observe(
+            "autosage_probe_ms", outcome.overhead_ms, op="attention"
+        )
+        obs.record_probe_estimates(
+            "attention", outcome.probe_ms, estimates, base.full_name()
         )
     else:
         # no challengers: only the 3-kernel baseline applies, skip probing
         outcome = ProbeOutcome({}, None, float("inf"), 0.0, 0.0, 0.0)
-    gr = apply_guardrail(
-        outcome.best_name, outcome.t_best_ms, outcome.t_baseline_ms, sage.alpha
-    )
+    with obs.span("guardrail", op="attention"):
+        gr = apply_guardrail(
+            outcome.best_name, outcome.t_best_ms, outcome.t_baseline_ms,
+            sage.alpha,
+        )
     variant = by_name[gr.choice] if gr.accepted else base
 
     stage_ms: Dict[str, float] = {}
@@ -144,9 +184,9 @@ def decide_attention(
     )
     if plan is not None:
         # the end-to-end probe doubles as the transfer's confirm pass
-        decision.transfer = plan.provenance(
-            "confirmed" if gr.choice == plan.choice else "flipped"
-        )
+        verdict = "confirmed" if gr.choice == plan.choice else "flipped"
+        decision.transfer = plan.provenance(verdict)
+        obs.REGISTRY.inc("autosage_transfer_verdict_total", verdict=verdict)
     if sage.cache is not None:
         # same v5 stats + neutral treatment as per-op decisions: the
         # batch scheduler's drift detector tracks fused-vs-composed
@@ -155,7 +195,7 @@ def decide_attention(
         # device classes
         sage.cache.put(key, entry_with_stats(decision, feat, base.full_name()))
     telemetry.emit_attention_decision(decision)
-    return decision
+    return decision, "probe"
 
 
 def attention_forward(sage: AutoSage, csr: CSR, q, k, v, seed: int = 0):

@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
+import time
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -55,6 +56,21 @@ class Variant:
             return self.name
         ks = ",".join(f"{k}={v}" for k, v in sorted(self.knobs.items()))
         return f"{self.name}[{ks}]"
+
+    def timed_prepare(self, csr: CSR, **kwargs) -> Dict:
+        """prepare() with the host-side conversion cost accounted to
+        ``autosage_prepare_ms{op,variant}`` — layout build time is part
+        of the amortized cost story (paper's cache warm-up) and the obs
+        flight recorder charges it per variant family."""
+        from repro.core import obs
+
+        t0 = time.perf_counter()
+        aux = self.prepare(csr, **kwargs)
+        obs.REGISTRY.observe(
+            "autosage_prepare_ms", (time.perf_counter() - t0) * 1e3,
+            op=self.op, variant=self.name,
+        )
+        return aux
 
 
 def _dev(aux: Dict) -> Dict:

@@ -28,6 +28,7 @@ def _warn_deprecated(old: str, new: str) -> None:
 
 from repro.core import estimate as est
 from repro.core import features as features_mod
+from repro.core import obs
 from repro.core import probe as probe_mod
 from repro.core import registry
 from repro.core import telemetry
@@ -226,7 +227,7 @@ class AutoSage:
             full-graph-equivalent), or plain median in point mode."""
             times = []
             for sub, args in zip(subs, args_per_sub):
-                aux = v.prepare(sub)
+                aux = v.timed_prepare(sub)
                 run = v.build(aux)
                 res = probe_mod.time_callable(
                     lambda: run(*args), iters=self.probe_iters,
@@ -261,11 +262,13 @@ class AutoSage:
         self, feat: InputFeatures, cands: List[registry.Variant]
     ) -> tuple:
         """Estimate stage: (estimates_ms, top-k non-baseline candidates)."""
-        estimates = est.estimates_for(feat, self.hw, cands)
-        short = sorted(
-            (v for v in cands if not v.is_baseline),
-            key=lambda v: estimates[v.full_name()],
-        )[: self.top_k]
+        with obs.span("estimate", op=feat.op, n_candidates=len(cands)):
+            estimates = est.estimates_for(feat, self.hw, cands)
+        with obs.span("shortlist", op=feat.op, top_k=self.top_k):
+            short = sorted(
+                (v for v in cands if not v.is_baseline),
+                key=lambda v: estimates[v.full_name()],
+            )[: self.top_k]
         return estimates, short
 
     # ------------------------------------------------------------------
@@ -292,7 +295,34 @@ class AutoSage:
         ``allow_transfer=False`` forces a real local measurement — the
         batch scheduler's confirm/drift re-probes use it.
         """
-        feat = InputFeatures.from_csr(csr, f, op)
+        t0 = time.perf_counter()
+        with obs.span("decide", op=op, f=f, scheduler="exact"):
+            decision, tier = self._decide_impl(
+                csr, f, op, probe_args_fn=probe_args_fn, seed=seed,
+                allow_transfer=allow_transfer,
+            )
+        obs.REGISTRY.inc(
+            "autosage_decides_total", op=op, tier=tier, scheduler="exact"
+        )
+        obs.REGISTRY.observe(
+            "autosage_decide_ms", (time.perf_counter() - t0) * 1e3,
+            op=op, scheduler="exact",
+        )
+        return decision
+
+    def _decide_impl(
+        self,
+        csr: CSR,
+        f: int,
+        op: str,
+        probe_args_fn: Optional[Callable[[CSR], tuple]] = None,
+        seed: int = 0,
+        allow_transfer: bool = True,
+    ) -> tuple:
+        """decide() body; returns (Decision, tier) where tier is the
+        accounting label "cache" | "transfer" | "probe"."""
+        with obs.span("features", op=op):
+            feat = InputFeatures.from_csr(csr, f, op)
         key = ScheduleCache.key(device_sig(), feat.graph_sig, f, op, self.alpha)
 
         cands = registry.candidates(feat, self.hw)
@@ -313,7 +343,7 @@ class AutoSage:
             # comparing a *cached* choice against the current input's
             # padding_waste (see telemetry.emit_decide_event)
             telemetry.emit_decide_event(decision, feat)
-            return decision
+            return decision, "cache"
 
         estimates, short = self.shortlist(feat, cands)
         plan = None
@@ -337,23 +367,36 @@ class AutoSage:
             self.cache.put(
                 key, entry_with_stats(decision, feat, base.full_name())
             )
+            obs.REGISTRY.inc(
+                "autosage_transfer_verdict_total", verdict="confirmed"
+            )
             telemetry.emit_decide_event(decision, feat, kind="transfer")
-            return decision
+            return decision, "transfer"
 
         if short:
-            outcome = self.probe_candidates(
-                csr, base, short,
-                probe_args_fn or default_probe_args(op, f, seed), seed=seed,
+            with obs.span("probe", op=op, n_candidates=len(short) + 1):
+                outcome = self.probe_candidates(
+                    csr, base, short,
+                    probe_args_fn or default_probe_args(op, f, seed),
+                    seed=seed,
+                )
+            obs.REGISTRY.inc("autosage_probe_passes_total", op=op)
+            obs.REGISTRY.observe(
+                "autosage_probe_ms", outcome.overhead_ms, op=op
+            )
+            obs.record_probe_estimates(
+                op, outcome.probe_ms, estimates, base.full_name()
             )
         else:
             # no challengers: the decision can only be baseline, skip the
             # subgraph extraction + compile + timing entirely
             outcome = ProbeOutcome({}, None, float("inf"), 0.0, 0.0, 0.0)
 
-        gr = apply_guardrail(
-            outcome.best_name, outcome.t_best_ms, outcome.t_baseline_ms,
-            self.alpha,
-        )
+        with obs.span("guardrail", op=op):
+            gr = apply_guardrail(
+                outcome.best_name, outcome.t_best_ms, outcome.t_baseline_ms,
+                self.alpha,
+            )
         variant = by_name[gr.choice] if gr.accepted else base
         decision = Decision(
             op=op, choice=gr.choice, variant=variant, guardrail=gr,
@@ -363,15 +406,15 @@ class AutoSage:
         )
         if plan is not None:
             # the probe doubles as the transfer's confirm measurement
-            decision.transfer = plan.provenance(
-                "confirmed" if gr.choice == plan.choice else "flipped"
-            )
+            verdict = "confirmed" if gr.choice == plan.choice else "flipped"
+            decision.transfer = plan.provenance(verdict)
+            obs.REGISTRY.inc("autosage_transfer_verdict_total", verdict=verdict)
         if self.cache is not None:
             self.cache.put(
                 key, entry_with_stats(decision, feat, base.full_name())
             )
         telemetry.emit_decide_event(decision, feat)
-        return decision
+        return decision, "probe"
 
     # ------------------------------------------------------------------
     def build_runner(self, csr: CSR, decision: Decision) -> Callable:
@@ -387,8 +430,10 @@ class AutoSage:
             # trace time). The prepared layout tables must be CONCRETE
             # device arrays, not trace-scoped constants — a memoized
             # runner closing over tracers poisons every later trace.
-            with jax.ensure_compile_time_eval():
-                aux = decision.variant.prepare(csr)
+            with obs.span(
+                "prepare", op=decision.op, choice=decision.choice
+            ), jax.ensure_compile_time_eval():
+                aux = decision.variant.timed_prepare(csr)
                 runner = decision.variant.build(aux)
             padding = {
                 k: float(v) for k, v in aux.items()

@@ -15,12 +15,25 @@ import json
 import os
 import platform
 import threading
+import time
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
 import jax
 
 from repro.core.features import device_sig
+
+# version stamp for every JSONL record this module writes; bump when a
+# stream's field layout changes so downstream readers (obs_cli, the
+# nightly artifact tooling) can branch instead of guessing
+JSONL_SCHEMA = 1
+
+
+def _env_snapshot() -> Dict[str, str]:
+    """The AUTOSAGE_* env AT THIS CALL — never cached at import: tests
+    and the fleet harness rotate AUTOSAGE_* between cases, and a stale
+    module-level snapshot would attribute records to the wrong config."""
+    return {k: v for k, v in os.environ.items() if k.startswith("AUTOSAGE_")}
 
 
 def _meta() -> Dict:
@@ -29,7 +42,7 @@ def _meta() -> Dict:
         "jax_version": jax.__version__,
         "python": platform.python_version(),
         "platform": platform.platform(),
-        "env": {k: v for k, v in os.environ.items() if k.startswith("AUTOSAGE_")},
+        "env": _env_snapshot(),
     }
 
 
@@ -80,12 +93,19 @@ atexit.register(close_streams)
 
 
 def append_jsonl(path: str, record: Dict) -> None:
-    """Append one JSON record (tagged with the device signature) to a
-    .jsonl stream; creates parent dirs on first write. The record is
-    serialized first and written with a single write() so concurrent
-    writer processes cannot interleave partial lines."""
+    """Append one JSON record (tagged with the device signature, the
+    stream schema version, and a monotonic timestamp for in-process
+    ordering) to a .jsonl stream; creates parent dirs on first write.
+    The record is serialized first and written with a single write() so
+    concurrent writer processes cannot interleave partial lines."""
     line = json.dumps(
-        {"device_sig": device_sig(), **record}, sort_keys=True
+        {
+            "schema": JSONL_SCHEMA,
+            "t_mono": time.monotonic(),
+            "device_sig": device_sig(),
+            **record,
+        },
+        sort_keys=True,
     ) + "\n"
     _handle(path).write(line.encode())
 

@@ -42,6 +42,7 @@ import os
 from typing import Any, Dict, List, Optional
 
 from repro.core import estimate as est_mod
+from repro.core import obs
 from repro.core.features import HardwareSpec, InputFeatures
 from repro.core.guardrail import GuardrailDecision, apply_guardrail
 
@@ -256,12 +257,13 @@ def best_plan(
 ) -> Optional[TransferPlan]:
     """First workable plan over the donor list (freshest probe first, as
     returned by ScheduleCache.peer_entries)."""
-    for key, entry in peers:
-        if not isinstance(entry, dict):
-            continue
-        plan = plan_transfer(
-            key, entry, feat, hw, by_name, base, alpha, margin=margin
-        )
-        if plan is not None:
-            return plan
-    return None
+    with obs.span("transfer", op=feat.op, n_peers=len(peers)):
+        for key, entry in peers:
+            if not isinstance(entry, dict):
+                continue
+            plan = plan_transfer(
+                key, entry, feat, hw, by_name, base, alpha, margin=margin
+            )
+            if plan is not None:
+                return plan
+        return None

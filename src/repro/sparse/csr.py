@@ -8,15 +8,59 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, Optional, Tuple
+from typing import Dict, MutableMapping, Optional, Tuple
 
 import numpy as np
 
-# transposed-layout cache telemetry: "built" counts real O(nnz log nnz)
-# conversions, "hits" counts per-object memo or structure-cache reuse.
-# tests/test_autodiff.py asserts backward passes stop re-converting after
-# step 1; examples/train_gnn.py reports these per run.
-TRANSPOSE_STATS: Dict[str, int] = {"built": 0, "hits": 0}
+
+class _TransposeStats(MutableMapping):
+    """Transposed-layout cache telemetry, backed by the process metrics
+    registry (``autosage_transpose_total{event=built|hits}``) so there is
+    exactly one accounting path (core/obs.py). Keeps the historical
+    dict surface — ``TRANSPOSE_STATS["built"] += 1``, membership,
+    iteration — that tests/test_autodiff.py and examples/train_gnn.py
+    read. The registry import is lazy per access: repro.sparse.csr sits
+    below repro.core in the import graph."""
+
+    _KEYS = ("built", "hits")
+
+    @staticmethod
+    def _registry():
+        from repro.core.obs import REGISTRY
+
+        return REGISTRY
+
+    def __getitem__(self, key: str) -> int:
+        if key not in self._KEYS:
+            raise KeyError(key)
+        v = self._registry().get("autosage_transpose_total", event=key)
+        return int(v or 0)
+
+    def __setitem__(self, key: str, value: int) -> None:
+        if key not in self._KEYS:
+            raise KeyError(key)
+        self._registry().set_counter(
+            "autosage_transpose_total", int(value), event=key
+        )
+
+    def __delitem__(self, key: str) -> None:
+        raise TypeError("TRANSPOSE_STATS keys are fixed")
+
+    def __iter__(self):
+        return iter(self._KEYS)
+
+    def __len__(self) -> int:
+        return len(self._KEYS)
+
+    def __repr__(self) -> str:
+        return repr(dict(self))
+
+
+# "built" counts real O(nnz log nnz) conversions, "hits" counts
+# per-object memo or structure-cache reuse. tests/test_autodiff.py
+# asserts backward passes stop re-converting after step 1;
+# examples/train_gnn.py reports these per run.
+TRANSPOSE_STATS: MutableMapping = _TransposeStats()
 
 # process-level structure cache keyed by graph signature: training loops
 # rebuild CSR objects per step (e.g. models/gnn._norm_csr re-weights the

@@ -1,0 +1,413 @@
+"""Flight-recorder contract tests: span schema + nesting, log-bucket
+percentile math vs exact quantiles, exporter formats, env-off => zero
+files, replay no-op, multi-process whole-line JSONL appends, and the
+stats()/TRANSPOSE_STATS parity with the metrics registry."""
+import json
+import math
+import os
+import subprocess
+import sys
+from pathlib import Path
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import obs
+from repro.core.obs import Histogram, MetricsRegistry, ScopedCounter
+from repro.sparse import fixed_degree
+from repro.sparse.csr import TRANSPOSE_STATS, reset_transpose_stats
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs(monkeypatch, tmp_path):
+    """Every test gets a fresh recorder, its own obs dir, and obs OFF
+    unless the test opts in."""
+    monkeypatch.delenv("AUTOSAGE_OBS", raising=False)
+    monkeypatch.delenv("AUTOSAGE_REPLAY_ONLY", raising=False)
+    monkeypatch.setenv("AUTOSAGE_OBS_DIR", str(tmp_path / "obs"))
+    obs.reset()
+    reset_transpose_stats()
+    yield
+    obs.reset()
+    reset_transpose_stats()
+
+
+# ------------------------------------------------------------- gating
+def test_disabled_records_nothing_and_writes_nothing(tmp_path):
+    with obs.span("decide", op="spmm"):
+        with obs.span("probe"):
+            pass
+    assert obs.span_names() == []
+    assert obs.flush() == {}
+    assert not (tmp_path / "obs").exists()
+
+
+def test_replay_only_disables_even_with_obs_set(monkeypatch, tmp_path):
+    monkeypatch.setenv("AUTOSAGE_OBS", "1")
+    monkeypatch.setenv("AUTOSAGE_REPLAY_ONLY", "1")
+    assert not obs.enabled()
+    with obs.span("decide"):
+        pass
+    assert obs.span_names() == []
+    assert obs.flush() == {}
+    assert not (tmp_path / "obs").exists()
+
+
+def test_enabled_is_read_per_call(monkeypatch):
+    monkeypatch.setenv("AUTOSAGE_OBS", "1")
+    with obs.span("a"):
+        pass
+    monkeypatch.setenv("AUTOSAGE_OBS", "0")
+    with obs.span("b"):
+        pass
+    assert obs.span_names() == ["a"]
+
+
+# ----------------------------------------------------- spans + schema
+def test_span_nesting_and_golden_schema(monkeypatch):
+    monkeypatch.setenv("AUTOSAGE_OBS", "1")
+    with obs.span("decide", op="spmm", f=16):
+        with obs.span("features", op="spmm"):
+            pass
+        with obs.span("probe", n_candidates=3):
+            pass
+    recs = {r["name"]: r for r in map(obs._render, obs._spans)}
+    assert set(recs) == {"decide", "features", "probe"}
+    for r in recs.values():
+        # golden schema: every span record carries these exact fields
+        assert r["schema"] == obs.OBS_SCHEMA
+        assert r["ph"] == "X"
+        assert isinstance(r["ts_us"], int) and isinstance(r["dur_us"], int)
+        assert r["dur_us"] >= 1
+        assert isinstance(r["t_mono"], float)
+        assert r["pid"] == os.getpid()
+    assert recs["decide"]["parent"] is None and recs["decide"]["depth"] == 0
+    assert recs["features"]["parent"] == "decide"
+    assert recs["probe"]["parent"] == "decide" and recs["probe"]["depth"] == 1
+    assert recs["decide"]["args"] == {"op": "spmm", "f": 16}
+    # children complete before the parent, and fit inside its duration
+    assert recs["features"]["t_mono"] >= recs["decide"]["t_mono"]
+
+
+def test_flush_and_export_trace_load_as_chrome_json(monkeypatch, tmp_path):
+    monkeypatch.setenv("AUTOSAGE_OBS", "1")
+    with obs.span("decide", op="spmm"):
+        with obs.span("probe"):
+            pass
+    paths = obs.flush()
+    trace = json.loads(Path(paths["trace"]).read_text())
+    assert {e["name"] for e in trace["traceEvents"]} == {"decide", "probe"}
+    for e in trace["traceEvents"]:
+        assert e["ph"] == "X" and e["cat"] == "autosage"
+        assert e["ts"] > 0 and e["dur"] >= 1
+    # spans.jsonl: one whole JSON record per line, schema-stamped
+    lines = Path(paths["spans"]).read_text().splitlines()
+    assert len(lines) == 2
+    assert all(json.loads(ln)["schema"] == obs.OBS_SCHEMA for ln in lines)
+    # export_trace merges the file back into one loadable trace
+    out = tmp_path / "merged.json"
+    merged = obs.export_trace(str(out))
+    assert json.loads(out.read_text()) == merged
+    assert len(merged["traceEvents"]) == 2
+    # second flush appends nothing new (prefix bookkeeping)
+    obs.flush()
+    assert len(Path(paths["spans"]).read_text().splitlines()) == 2
+
+
+def test_span_cap_drops_not_grows(monkeypatch):
+    monkeypatch.setenv("AUTOSAGE_OBS", "1")
+    monkeypatch.setattr(obs, "_SPAN_CAP", 5)
+    for _ in range(9):
+        with obs.span("x"):
+            pass
+    assert len(obs._spans) == 5
+    assert obs._spans_dropped == 4
+
+
+# ------------------------------------------------- histogram math
+def test_histogram_percentiles_vs_exact_quantiles():
+    """Log-bucket quantiles land within one sqrt(2) bucket ratio of the
+    exact nearest-rank quantile, across several distributions."""
+    rng = np.random.default_rng(7)
+    for samples in (
+        rng.lognormal(mean=0.0, sigma=1.5, size=4000),
+        rng.uniform(0.01, 50.0, size=4000),
+        np.array([1.0, 2.0, 4.0, 8.0]),
+        np.full(100, 3.7),
+    ):
+        h = Histogram()
+        for v in samples:
+            h.observe(float(v))
+        for q in (0.50, 0.95, 0.99):
+            exact = float(np.quantile(samples, q, method="inverted_cdf"))
+            got = h.quantile(q)
+            assert got is not None
+            assert exact / math.sqrt(2) <= got <= exact * math.sqrt(2), (
+                q, exact, got,
+            )
+        assert h.mean() == pytest.approx(float(np.mean(samples)), rel=1e-9)
+    assert Histogram().quantile(0.5) is None
+
+
+def test_quantile_clamped_to_observed_range():
+    h = Histogram()
+    h.observe(2.0)
+    h.observe(3.0)
+    assert 2.0 <= h.quantile(0.01) <= 3.0
+    assert 2.0 <= h.quantile(0.999) <= 3.0
+
+
+# ------------------------------------------------- registry + exporters
+def test_registry_counters_labels_and_totals():
+    r = MetricsRegistry()
+    r.inc("autosage_decides_total", op="spmm", tier="probe")
+    r.inc("autosage_decides_total", op="spmm", tier="cache")
+    r.inc("autosage_decides_total", 2, op="sddmm", tier="cache")
+    assert r.get("autosage_decides_total", op="spmm", tier="probe") == 1
+    assert r.total("autosage_decides_total") == 4
+    assert r.total("autosage_decides_total", op="spmm") == 2
+    assert r.total("autosage_decides_total", tier="cache") == 3
+    assert r.get("autosage_decides_total", op="nope") is None
+
+
+def test_prometheus_text_format_parses():
+    r = MetricsRegistry()
+    r.inc("autosage_decides_total", op="spmm", tier="probe")
+    r.set_gauge("autosage_probe_budget_ms", 50.0)
+    for v in (0.5, 1.0, 2.0, 400.0):
+        r.observe("autosage_probe_ms", v, op="spmm")
+    text = r.prometheus_text()
+    assert 'autosage_decides_total{op="spmm",tier="probe"} 1' in text
+    assert "# TYPE autosage_probe_ms histogram" in text
+    assert 'autosage_probe_ms_bucket{op="spmm",le="+Inf"} 4' in text
+    assert 'autosage_probe_ms_count{op="spmm"} 4' in text
+    # every sample line: <name>{labels} <number>; le= buckets cumulative
+    cum_prev = 0
+    for line in text.splitlines():
+        if line.startswith("#") or not line:
+            continue
+        name_part, val = line.rsplit(" ", 1)
+        float(val)
+        if "_bucket{" in name_part and 'le="+Inf"' not in name_part:
+            assert int(val) >= cum_prev
+            cum_prev = int(val)
+    assert text.endswith("\n")
+
+
+def test_metrics_json_snapshot_schema():
+    r = MetricsRegistry()
+    r.inc("c", op="spmm")
+    r.observe("h", 1.5)
+    snap = json.loads(json.dumps(r.to_dict()))
+    assert snap["schema"] == obs.OBS_SCHEMA
+    assert isinstance(snap["t_mono"], float)
+    assert snap["counters"]["c"] == [{"labels": {"op": "spmm"}, "value": 1.0}]
+    row = snap["histograms"]["h"][0]
+    assert row["count"] == 1 and row["min"] == 1.5 and row["max"] == 1.5
+    assert row["p50"] == pytest.approx(1.5)
+
+
+# ------------------------------------------------------------ scorecard
+def test_scorecard_math():
+    obs.record_estimate("spmm", "row_ell", est_ms=1.0, measured_ms=1.5)
+    obs.record_estimate("spmm", "baseline", est_ms=2.0, measured_ms=1.0)
+    obs.record_estimate("spmm_bwd_x", "row_ell", est_ms=None, measured_ms=1.0)
+    card = obs.scorecard()
+    row = card["spmm/probe"]
+    assert row["pairs"] == 2
+    assert row["mean_abs_err_ms"] == pytest.approx(0.75)
+    assert row["mean_rel_err"] == pytest.approx((0.5 / 1.5 + 1.0) / 2)
+    assert obs.REGISTRY.get(
+        "autosage_est_pairs_total", family="spmm", source="probe",
+        candidate_kind="baseline",
+    ) == 1
+
+
+def test_record_probe_estimates_maps_baseline():
+    obs.record_probe_estimates(
+        "spmm",
+        probe_ms={"row_ell": 1.2, "baseline": 2.4},
+        estimates_ms={"row_ell": 1.0, "gather_segsum": 2.0},
+        baseline_name="gather_segsum",
+    )
+    assert obs.scorecard()["spmm/probe"]["pairs"] == 2
+
+
+# ------------------------------------------- one accounting path parity
+def test_batch_stats_backed_by_registry():
+    from repro.core import AutoSage, BatchScheduler, ScheduleCache
+
+    bs = BatchScheduler(
+        AutoSage(cache=ScheduleCache(path=None), probe_iters=1,
+                 probe_cap_ms=25, probe_frac=0.25),
+        probe_budget_ms=10_000,
+    )
+    for seed in range(3):
+        bs.decide(fixed_degree(256, 4, seed=seed), 16, "spmm")
+    stats = bs.stats()
+    assert stats["decides"] == 3
+    assert stats["decides"] == obs.REGISTRY.total(
+        "autosage_decides_total", scheduler="batch"
+    )
+    assert stats["probes_run"] == obs.REGISTRY.total(
+        "autosage_bucket_probe_passes_total"
+    )
+    assert stats["warm_cache_opens"] == obs.REGISTRY.total(
+        "autosage_bucket_warm_opens_total"
+    )
+
+
+def test_transpose_stats_backed_by_registry():
+    assert dict(TRANSPOSE_STATS) == {"built": 0, "hits": 0}
+    TRANSPOSE_STATS["built"] += 1
+    TRANSPOSE_STATS["hits"] += 2
+    assert TRANSPOSE_STATS["built"] == 1 and TRANSPOSE_STATS["hits"] == 2
+    assert obs.REGISTRY.get("autosage_transpose_total", event="built") == 1
+    assert obs.REGISTRY.get("autosage_transpose_total", event="hits") == 2
+    with pytest.raises(KeyError):
+        TRANSPOSE_STATS["nope"]
+    reset_transpose_stats()
+    assert dict(TRANSPOSE_STATS) == {"built": 0, "hits": 0}
+
+
+def test_scoped_counter_mirrors_registry():
+    c = ScopedCounter("autosage_transfers_total")
+    c.inc(op="spmm")
+    c.inc(2, op="sddmm")
+    assert c.value == 3
+    assert obs.REGISTRY.total("autosage_transfers_total") == 3
+    # a second instance keeps its own .value but shares the series
+    c2 = ScopedCounter("autosage_transfers_total")
+    c2.inc(op="spmm")
+    assert c2.value == 1
+    assert obs.REGISTRY.total("autosage_transfers_total") == 4
+
+
+# ----------------------------------------------- telemetry satellites
+def test_telemetry_jsonl_records_carry_schema_and_t_mono(
+    monkeypatch, tmp_path
+):
+    from repro.core import telemetry
+
+    monkeypatch.setenv("AUTOSAGE_TELEMETRY_DIR", str(tmp_path))
+    d = SimpleNamespace(op="spmm", choice="row_ell", from_cache=False,
+                        transfer=None)
+    path = telemetry.emit_decide_event(d, graph_sig="cafe")
+    telemetry.close_streams()
+    rec = json.loads(Path(path).read_text().splitlines()[0])
+    assert rec["schema"] == telemetry.JSONL_SCHEMA
+    assert isinstance(rec["t_mono"], float)
+    assert rec["graph_sig"] == "cafe" and rec["choice"] == "row_ell"
+
+
+def test_meta_env_snapshot_taken_at_call_time(monkeypatch):
+    from repro.core import telemetry
+
+    monkeypatch.setenv("AUTOSAGE_FAKE_KNOB", "before")
+    assert telemetry._meta()["env"]["AUTOSAGE_FAKE_KNOB"] == "before"
+    monkeypatch.setenv("AUTOSAGE_FAKE_KNOB", "after")
+    assert telemetry._meta()["env"]["AUTOSAGE_FAKE_KNOB"] == "after"
+
+
+# ------------------------------------------------- multi-process appends
+_WRITER = r"""
+import json, os, sys
+sys.path.insert(0, sys.argv[3])
+os.environ["AUTOSAGE_OBS"] = "1"
+os.environ["AUTOSAGE_OBS_DIR"] = sys.argv[1]
+from repro.core import obs
+wid = int(sys.argv[2])
+for i in range(50):
+    with obs.span("worker", wid=wid, i=i):
+        pass
+obs.flush()
+"""
+
+
+def test_multiprocess_spans_jsonl_has_no_partial_lines(tmp_path):
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", _WRITER, str(tmp_path), str(w), src],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        )
+        for w in range(3)
+    ]
+    for p in procs:
+        _, err = p.communicate(timeout=120)
+        assert p.returncode == 0, err.decode()
+    lines = (tmp_path / "spans.jsonl").read_text().splitlines()
+    assert len(lines) == 150
+    pids = set()
+    for ln in lines:
+        rec = json.loads(ln)  # every line parses: no interleaved partials
+        assert rec["name"] == "worker"
+        pids.add(rec["pid"])
+    assert len(pids) == 3
+    # the merged trace is loadable and carries all three workers
+    trace = obs.export_trace(str(tmp_path / "merged.json"),
+                             directory=str(tmp_path))
+    assert len(trace["traceEvents"]) == 150
+
+
+# ------------------------------------------------------------- obs_cli
+def test_obs_cli_explain_summary_export(monkeypatch, tmp_path, capsys):
+    monkeypatch.setenv("AUTOSAGE_OBS", "1")
+    monkeypatch.setenv("AUTOSAGE_TELEMETRY_DIR", str(tmp_path / "t"))
+    from repro import obs_cli
+    from repro.core import AutoSage, BatchScheduler, ScheduleCache, telemetry
+
+    cache_path = str(tmp_path / "cache.json")
+    bs = BatchScheduler(
+        AutoSage(cache=ScheduleCache(path=cache_path), probe_iters=1,
+                 probe_cap_ms=25, probe_frac=0.25),
+        probe_budget_ms=10_000,
+    )
+    for seed in range(2):
+        bs.decide(fixed_degree(256, 4, seed=seed), 16, "spmm")
+        bs.observe(bs.last_bucket, 0.4)
+    bs.finalize()
+    telemetry.close_streams()
+    key = next(
+        k for k in json.load(open(cache_path)) if k.startswith("bucket|")
+    )
+    text = obs_cli.explain(key, cache_path=cache_path,
+                           telemetry_dir=str(tmp_path / "t"))
+    assert "tier: probe" in text
+    assert "pinned choice:" in text
+    assert "decides served" in text
+    assert "EWMA=0.4000ms" in text
+    # unknown key: suggestions, not a traceback
+    miss = obs_cli.explain("bucket|nope", cache_path=cache_path)
+    assert "no entry" in miss
+
+    paths = obs.flush()
+    out = obs_cli.summary(str(Path(paths["prom"]).parent))
+    assert "autosage_decides_total" in out
+    assert obs_cli.main(
+        ["summary", "--obs", str(Path(paths["prom"]).parent)]
+    ) == 0
+    assert "autosage_decides_total" in capsys.readouterr().out
+
+    assert obs_cli.main(
+        ["export-trace", "--obs", str(Path(paths["prom"]).parent),
+         "--out", str(tmp_path / "tr.json")]
+    ) == 0
+    trace = json.loads((tmp_path / "tr.json").read_text())
+    assert {"decide", "features", "probe"} <= {
+        e["name"] for e in trace["traceEvents"]
+    }
+
+
+def test_obs_cli_tier_naming():
+    from repro.obs_cli import _tier_of
+
+    assert _tier_of({"probed": True, "stats": {"probes": 1}}) == "probe"
+    assert _tier_of({"probed": True, "stats": {"probes": 3}}).startswith(
+        "drift (re-probed 2x)"
+    )
+    assert _tier_of(
+        {"probed": False, "transfer": {"verdict": "confirmed"}}
+    ) == "transfer (confirmed)"
+    assert _tier_of({"probed": False}).startswith("provisional")
