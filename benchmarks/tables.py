@@ -1305,6 +1305,99 @@ def obs_overhead(full: bool = False) -> List[Tuple]:
     return rows
 
 
+def chaos_smoke(full: bool = False) -> List[Tuple]:
+    """Seconds-fast CI gate on fault tolerance: (1) with every runner
+    faulting forever the scheduled output is BIT-IDENTICAL to the
+    kernels/ref oracle and nothing quarantined gets pinned; (2) with
+    prepare faulting permanently the decision still lands; (3) a
+    2-worker fleet leg under injected cache-lock faults finishes with a
+    loadable shared cache and no leaked lockfile, with faults.jsonl
+    dropped; (4) the resilience wrappers cost <= 2% on the warm decide
+    path when no fault fires (vs AUTOSAGE_RESILIENCE=0)."""
+    del full
+    import json as _json
+    import tempfile
+    from pathlib import Path as _Path
+
+    import jax.numpy as jnp
+
+    from repro.core import AutoSage, ScheduleCache, faultinject
+    from repro.kernels import ref
+    from repro.sparse import hub_skew
+
+    csr = hub_skew(800, 4, 0.05, 24, seed=0).dedup_edges()
+    b = jnp.ones((csr.n_cols, 16), jnp.float32)
+    oracle = np.asarray(
+        ref.spmm_ref(jnp.asarray(csr.rowptr), jnp.asarray(csr.colind), None, b)
+    )
+    rows: List[Tuple] = []
+    with tempfile.TemporaryDirectory() as tmp:
+        # --- legs 1+2: deterministic injection, oracle-equal outputs ---
+        for leg, spec in (("run_fault", "run::raise:"),
+                          ("prepare_fault", "prepare::oom:")):
+            with _env_overlay(AUTOSAGE_FAULT=spec,
+                              AUTOSAGE_TELEMETRY_DIR=f"{tmp}/tel_{leg}"):
+                faultinject.reset()
+                sage = AutoSage(
+                    cache=ScheduleCache(path=f"{tmp}/{leg}.json"),
+                    probe_iters=1, probe_cap_ms=25, probe_frac=0.25,
+                )
+                d = sage.decide(csr, 16, "spmm")
+                out = np.asarray(sage.build_runner(csr, d)(b))
+                assert (out == oracle).all(), f"{leg}: output != oracle"
+                for key, entry in sage.cache._data.items():
+                    if isinstance(entry, dict) and "quarantine" not in entry:
+                        ch = entry.get("choice")
+                        assert not (
+                            isinstance(ch, str) and sage.breaker.is_quarantined(ch)
+                        ), f"{leg}: quarantined {ch!r} pinned at {key}"
+                fj = _Path(f"{tmp}/tel_{leg}/faults.jsonl")
+                assert fj.exists(), f"{leg}: no faults.jsonl"
+                n_fired = int(sum(faultinject.fired().values()))
+                assert n_fired > 0, f"{leg}: injection never fired"
+                faultinject.reset()
+            rows.append((leg, n_fired, "output==oracle"))
+
+        # --- leg 3: fleet under lock chaos -----------------------------
+        shared = f"{tmp}/shared.json"
+        with _env_overlay(AUTOSAGE_FAULT="lock::raise:3",
+                          AUTOSAGE_TELEMETRY_DIR=f"{tmp}/tel_fleet"):
+            for w in range(2):
+                _run_shared_worker(shared, shared=True, seed=w)
+        assert not list(_Path(tmp).glob("*.lock")), "leaked lockfile"
+        assert isinstance(_json.load(open(shared)), dict)
+        rows.append(("fleet_lock_chaos", 2, "cache loadable, no .lock"))
+
+        # --- leg 4: decide-path overhead of the wrappers ---------------
+        with _env_overlay(AUTOSAGE_FAULT=None):
+            with _env_overlay(AUTOSAGE_RESILIENCE="0"):
+                off_ms = _warm_decide_wall_ms(tmp, on=False, tag="res_off")
+            on_ms = _warm_decide_wall_ms(tmp, on=False, tag="res_on")
+            for _ in range(2):
+                if on_ms <= off_ms * 1.02 + 0.25:
+                    break
+                with _env_overlay(AUTOSAGE_RESILIENCE="0"):
+                    off_ms = min(
+                        off_ms, _warm_decide_wall_ms(tmp, False, "res_off"))
+                on_ms = min(on_ms, _warm_decide_wall_ms(tmp, False, "res_on"))
+
+    overhead_pct = (on_ms / off_ms - 1.0) * 100 if off_ms else 0.0
+    rows += [
+        ("decide_wall_resilience_off_ms", round(off_ms, 3), "-"),
+        ("decide_wall_resilience_on_ms", round(on_ms, 3),
+         f"overhead={overhead_pct:.1f}%"),
+    ]
+    for name, val, note in rows:
+        print(f"  [chaos-smoke] {name:28s} {val!s:>8s} {note}")
+    # artifact first: a failed gate still leaves the numbers for triage
+    write_csv(f"{OUT}/chaos_smoke.csv", ["metric", "value", "note"], rows)
+    assert on_ms <= off_ms * 1.02 + 0.25, (
+        f"resilience decide-path overhead: on={on_ms:.3f}ms "
+        f"off={off_ms:.3f}ms"
+    )
+    return rows
+
+
 ALL_TABLES = {
     "table2_7_reddit": table_reddit,
     "table3_8_products": table_products,
@@ -1332,4 +1425,5 @@ SMOKE_TABLES = {
     "portability_smoke": portability_smoke,
     "train_smoke": train_smoke,
     "obs_smoke": obs_smoke,
+    "chaos_smoke": chaos_smoke,
 }

@@ -21,6 +21,12 @@ from repro.core.obs import (
 )
 from repro.core.transfer import TransferPlan, best_plan, plan_transfer
 from repro.core.scheduler import AutoSage, Decision, ProbeOutcome
+from repro.core.faultinject import InjectedFault, fault_point
+from repro.core.resilience import (
+    CircuitBreaker,
+    FaultPolicy,
+    ProbeTimeout,
+)
 from repro.core.cache import (
     CacheKey,
     CacheLockTimeout,
@@ -38,7 +44,12 @@ __all__ = [
     "BatchScheduler",
     "CacheKey",
     "CacheLockTimeout",
+    "CircuitBreaker",
     "Decision",
+    "FaultPolicy",
+    "InjectedFault",
+    "ProbeTimeout",
+    "fault_point",
     "HardwareSpec",
     "InputFeatures",
     "MetricsRegistry",

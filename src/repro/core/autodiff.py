@@ -52,8 +52,25 @@ def _scheduled(sched, csr: CSR, f: int, op: str, *args):
     """
     kind = "bwd" if "_bwd" in op else "fwd"
     with obs.span(f"{kind}.{op}", op=op):
-        d = _decide(sched, csr, int(f), op)
-        runner = sched.build_runner(csr, d)
+        try:
+            d = _decide(sched, csr, int(f), op)
+            runner = sched.build_runner(csr, d)
+        except Exception as exc:
+            # defense in depth for non-AutoSage scheds (duck-typed custom
+            # schedulers have no fallback chain of their own): a training
+            # step's bwd op must never die on a scheduling fault. The
+            # reference oracle is always runnable. ReplayMiss stays loud
+            # — the replay contract forbids silent substitution.
+            from repro.core import resilience
+            from repro.core.cache import ReplayMiss
+
+            if isinstance(exc, ReplayMiss) or not resilience.enabled():
+                raise
+            resilience.record_fault("decide", "", op, exc)
+            resilience.record_fallback("scheduler", "reference", op)
+            runner = resilience.reference_runner(csr, op)
+            with obs.span("run", op=op, choice="reference"):
+                return runner(*args)
         with obs.span("run", op=op, choice=d.choice):
             return runner(*args)
 

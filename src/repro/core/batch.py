@@ -67,9 +67,9 @@ import zlib
 from typing import Any, Callable, Dict, List, Optional, Union
 
 from repro.core import obs
-from repro.core import registry, telemetry
+from repro.core import registry, resilience, telemetry
 from repro.core import transfer as transfer_mod
-from repro.core.cache import ScheduleCache
+from repro.core.cache import ReplayMiss, ScheduleCache
 from repro.core.features import (
     InputFeatures,
     ScheduleBucket,
@@ -309,6 +309,7 @@ class BatchScheduler:
             st.last_csr, st.last_feat = csr, feat
             self.last_bucket = bucket
             self._check_waste_drift(st, feat)
+            self._check_fault_retire(st)
             if self.auto_pump and not self.cache.replay_only:
                 self.pump(self.max_probes_per_decide)
             d = st.current()
@@ -352,6 +353,23 @@ class BatchScheduler:
         # replay / warm-start: a pinned bucket decision ends the story.
         # In replay-only mode a miss raises ReplayMiss — the contract.
         cached = self.cache.get(key)
+        # A quarantined pinned choice (circuit breaker, core/resilience.py)
+        # is a third unusable shape: serving it would re-run a known-
+        # faulting candidate bucket-wide. Replay raises instead of
+        # silently substituting — the replay contract.
+        if (
+            resilience.enabled() and isinstance(cached, dict)
+            and cached.get("choice") not in (None, "baseline")
+        ):
+            self.sage.breaker.maybe_sync()
+            if self.sage.breaker.is_quarantined(cached["choice"]):
+                if self.cache.replay_only:
+                    raise ReplayMiss(
+                        f"pinned choice {cached['choice']!r} for {key} is "
+                        "quarantined (AUTOSAGE_REPLAY_ONLY=1 forbids "
+                        "substituting)"
+                    )
+                cached = None  # fall through to an honest local re-probe
         # Two cached shapes must NOT be adopted as final outside replay:
         #  - a peer's never-probed provisional baseline ("probed": False,
         #    pinned by its finalize) — a worker WITH budget treats it as
@@ -434,6 +452,7 @@ class BatchScheduler:
             plan = transfer_mod.best_plan(
                 self.cache.peer_entries(key), feat, self.sage.hw, by_name,
                 base, self.sage.alpha,
+                excluded=self.sage.breaker.excluded_names(),
             )
             if plan is not None:
                 verdict = "confirmed" if plan.confident else "pending"
@@ -537,8 +556,18 @@ class BatchScheduler:
             if was_drift
             else contextlib.nullcontext()
         )
+        # a faulted flush (lock contention, injected chaos) must not
+        # lose the probed decision: cache_guard swallows the write
+        # failure, the entry stays dirty for the next flush, and the
+        # bucket still serves d
+        flush_guard = (
+            resilience.cache_guard(op=st.rep_feat.op)
+            if resilience.enabled()
+            else contextlib.nullcontext()
+        )
+        d = st.current()
         # defer flushing inside: exact + bucket puts -> one write
-        with reprobe_span, self.cache:
+        with reprobe_span, flush_guard, self.cache:
             # allow_transfer=False: this IS the measurement that confirms
             # (or flips) a transferred choice and re-pins drifted buckets
             # — an estimate-space shortcut here would be circular
@@ -566,6 +595,13 @@ class BatchScheduler:
                     d.transfer = st.transfer_info
             st.probed = True
             st.decision = d
+            if resilience.enabled() and d.choice != "baseline":
+                # the re-probe answered the fault signal: clear the
+                # breaker's consecutive/run-failure counts for the
+                # re-pinned choice so _check_fault_retire does not
+                # re-flag off a stale count (they re-accrue on the next
+                # real fault)
+                self.sage.breaker.record_success(d.choice)
             st.probe_est_ms = d.probe_ms.get(d.choice)
             st.waste_at_probe = st.rep_feat.padding_waste
             # the new probe resets the regime: statistics restart, and
@@ -740,6 +776,61 @@ class BatchScheduler:
             }
         )
 
+    def _check_fault_retire(self, st: _BucketState) -> None:
+        """Route run-time faults back into the bucket stream. A pinned or
+        transferred choice that is constructible but faults at first run
+        emits no drift signal — the fallback chain (core/resilience.py)
+        silently serves the baseline under the pinned name forever. The
+        circuit breaker records those run faults; this check re-opens the
+        bucket so the next pump re-probes honestly (allow_transfer=False
+        there, so a faulting peer import cannot be re-imported)."""
+        if not resilience.enabled() or st.drift_flagged or not st.probed:
+            return
+        d = st.decision
+        if d is None or d.choice == "baseline":
+            return
+        br = self.sage.breaker
+        if br.is_quarantined(d.choice):
+            self._flag_fault(
+                st, f"pinned choice {d.choice} is quarantined"
+            )
+        elif br.run_failures(d.choice) > 0:
+            self._flag_fault(
+                st, f"pinned choice {d.choice} faulted at run time"
+            )
+
+    def _flag_fault(self, st: _BucketState, reason: str) -> None:
+        """Like _flag_drift, but triggered by breaker state instead of
+        runtime statistics: the pinned decision keeps serving (its
+        fallback chain guarantees a runnable result) while the re-probe
+        waits on the normal budget."""
+        if self.cache.replay_only:
+            return  # replay is immutable by contract
+        st.drift_flagged = True
+        st.probed = False
+        st.drift_reason = reason
+        obs.REGISTRY.inc("autosage_quarantine_total", event="bucket_reopen")
+        telemetry.emit_batch_event(
+            {
+                "event": "fault_flag",
+                "bucket": st.bucket.sig(),
+                "op": st.bucket.op,
+                "f": st.bucket.f,
+                "choice": st.decision.choice if st.decision else "baseline",
+                "reason": reason,
+                "transferred": st.transferred,
+            }
+        )
+        telemetry.emit_fault_event(
+            {
+                "event": "bucket_reopen",
+                "bucket": st.bucket.sig(),
+                "op": st.bucket.op,
+                "choice": st.decision.choice if st.decision else "baseline",
+                "reason": reason,
+            }
+        )
+
     def _push_stats(self, st: _BucketState) -> None:
         """Fold this bucket's local traffic + observations into its cache
         entry (hit deltas merge-sum across the fleet)."""
@@ -807,12 +898,20 @@ class BatchScheduler:
         without a single probe. Returns the stream stats. No-op writes
         in replay mode (the cache is read-only there)."""
         if not self.cache.replay_only:
-            with self.cache:
-                for st in self._buckets.values():
-                    if not self.cache.contains(st.key):
-                        self.cache.put(st.key, self._bucket_entry(st, st.current()))
-                    self._push_stats(st)
-            self.cache.flush()
+            flush_guard = (
+                resilience.cache_guard(op="finalize")
+                if resilience.enabled()
+                else contextlib.nullcontext()
+            )
+            with flush_guard:
+                with self.cache:
+                    for st in self._buckets.values():
+                        if not self.cache.contains(st.key):
+                            self.cache.put(
+                                st.key, self._bucket_entry(st, st.current())
+                            )
+                        self._push_stats(st)
+                self.cache.flush()
         stats = self.stats()
         telemetry.emit_batch_event({"event": "finalize", **stats})
         return stats

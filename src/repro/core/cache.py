@@ -41,13 +41,14 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import random
 import tempfile
 import threading
 import time
 from pathlib import Path
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
-from repro.core import obs
+from repro.core import faultinject, obs
 
 DEFAULT_PATH = os.environ.get("AUTOSAGE_CACHE", "autosage_cache.json")
 
@@ -66,13 +67,47 @@ DEFAULT_PATH = os.environ.get("AUTOSAGE_CACHE", "autosage_cache.json")
 # rank_agreement) on entries that were transferred rather than probed.
 # Reads stay tolerant of every shape, so old caches replay unchanged
 # (v3/v4 entries grow default stats on load; transfer synthesizes a
-# ranking from v4 probe_ms/estimates_ms when "neutral" is absent).
-SCHEMA_VERSION = 5
+# ranking from v4 probe_ms/estimates_ms when "neutral" is absent); 6 adds
+# circuit-breaker quarantine records (core/resilience.py) stored under
+# ``quarantine|{device}|{candidate}`` keys: a quarantine entry carries a
+# "quarantine" dict (name/device/state/reason/since/ttl_s) and sets
+# stats.probed_at to the event time, so the v4 last-probe-wins fleet
+# merge resolves conflicting records by recency with no new merge code —
+# a fresh "cleared" beats a stale "active". parse_key() returns None for
+# quarantine keys, so v5 readers carry them along as foreign entries
+# (the tolerant-read contract) without serving them as decisions.
+SCHEMA_VERSION = 6
 
 _BUCKET_PREFIX = "bucket"
+_QUARANTINE_PREFIX = "quarantine"
 
 DEFAULT_LOCK_TIMEOUT_S = float(os.environ.get("AUTOSAGE_LOCK_TIMEOUT_S", "10"))
 DEFAULT_LOCK_STALE_S = float(os.environ.get("AUTOSAGE_LOCK_STALE_S", "30"))
+
+# lock-poll backoff: exponential with jitter, env-tunable. The old fixed
+# 5ms poll made N contending flushers hammer the lockfile in sync; the
+# jittered backoff decorrelates them (waits land in the labeled
+# autosage_cache_lock_wait_ms histogram either way).
+DEFAULT_LOCK_BACKOFF_BASE_MS = 2.0
+DEFAULT_LOCK_BACKOFF_MAX_MS = 50.0
+DEFAULT_LOCK_BACKOFF_JITTER = 0.5
+
+
+def _lock_backoff_s(attempt: int) -> float:
+    """Sleep before lock-acquire retry ``attempt`` (0-based): capped
+    exponential plus proportional jitter."""
+
+    def _f(name: str, default: float) -> float:
+        try:
+            return float(os.environ.get(name, default))
+        except ValueError:
+            return default
+
+    base = _f("AUTOSAGE_LOCK_BACKOFF_BASE_MS", DEFAULT_LOCK_BACKOFF_BASE_MS)
+    cap = _f("AUTOSAGE_LOCK_BACKOFF_MAX_MS", DEFAULT_LOCK_BACKOFF_MAX_MS)
+    jitter = _f("AUTOSAGE_LOCK_BACKOFF_JITTER", DEFAULT_LOCK_BACKOFF_JITTER)
+    delay_ms = min(base * (2.0 ** attempt), cap)
+    return (delay_ms / 1e3) * (1.0 + max(jitter, 0.0) * random.random())
 
 
 class ReplayMiss(RuntimeError):
@@ -223,6 +258,36 @@ class ScheduleCache:
     def bucket_key(device_sig: str, bucket_sig: str, f: int, op: str, alpha: float) -> str:
         return CacheKey("bucket", device_sig, bucket_sig, f, op, alpha).format()
 
+    # ---- quarantine records (schema v6, core/resilience.py) ----------
+    @staticmethod
+    def quarantine_key(device_sig: str, name: str) -> str:
+        """Key of the circuit breaker's record for one (candidate,
+        device) pair. Deliberately NOT a CacheKey shape: parse_key()
+        returns None for it, so every decision-serving path (get-by-key
+        aside), peer_entries, and keys_for_op skip it, and pre-v6
+        readers carry it as a foreign entry."""
+        return f"{_QUARANTINE_PREFIX}|{device_sig}|{name}"
+
+    def quarantine_records(
+        self, device: Optional[str] = None
+    ) -> List[Tuple[str, Dict[str, Any]]]:
+        """(key, quarantine-record) pairs, optionally for one device
+        signature. Read-only: works in replay mode (the breaker must
+        still *honor* a persisted blacklist under AUTOSAGE_REPLAY_ONLY,
+        it just may not extend it)."""
+        out: List[Tuple[str, Dict[str, Any]]] = []
+        prefix = _QUARANTINE_PREFIX + "|"
+        for k, v in self._data.items():
+            if not k.startswith(prefix) or not isinstance(v, dict):
+                continue
+            rec = v.get("quarantine")
+            if not isinstance(rec, dict):
+                continue
+            if device is not None and rec.get("device") != device:
+                continue
+            out.append((k, rec))
+        return out
+
     def contains(self, key: str) -> bool:
         return key in self._data
 
@@ -361,6 +426,9 @@ class ScheduleCache:
         self._write_atomic()
 
     def _write_atomic(self) -> None:
+        # chaos hook BEFORE mkstemp: an injected flush fault leaves no
+        # temp file behind and the cache simply stays dirty for retry
+        faultinject.fault_point("flush", name=str(self.path))
         # atomic rename so a crash never corrupts the cache
         fd, tmp = tempfile.mkstemp(
             dir=str(self.path.parent or "."), suffix=".tmp"
@@ -399,13 +467,19 @@ class ScheduleCache:
             pass  # alive, owned by someone else
         return False
 
-    def _acquire_lock(self) -> Path:
-        """O_CREAT|O_EXCL lockfile acquire with stale-holder recovery.
-        Raises CacheLockTimeout when a live holder outlasts
-        lock_timeout_s."""
+    def _acquire_lock(self) -> Tuple[Path, int]:
+        """O_CREAT|O_EXCL lockfile acquire with stale-holder recovery and
+        jittered exponential backoff between polls (AUTOSAGE_LOCK_BACKOFF_*).
+        Returns (lockfile, wait_attempts) so the caller can label the
+        lock-wait histogram. Raises CacheLockTimeout when a live holder
+        outlasts lock_timeout_s."""
+        # chaos hook BEFORE os.open: an injected lock fault can never
+        # leave a lockfile behind for peers to time out on
+        faultinject.fault_point("lock", name=str(self.path))
         lockfile = self._lockfile()
         payload = json.dumps({"pid": os.getpid(), "ts": time.time()}).encode()
         deadline = time.monotonic() + self.lock_timeout_s
+        attempts = 0
         while True:
             try:
                 fd = os.open(str(lockfile), os.O_CREAT | os.O_EXCL | os.O_WRONLY)
@@ -413,7 +487,7 @@ class ScheduleCache:
                     os.write(fd, payload)
                 finally:
                     os.close(fd)
-                return lockfile
+                return lockfile, attempts
             except FileExistsError:
                 if self._lock_is_stale(lockfile):
                     self._break_stale_lock(lockfile)
@@ -423,7 +497,10 @@ class ScheduleCache:
                         f"{lockfile} held by a live peer for more than "
                         f"{self.lock_timeout_s}s"
                     )
-                time.sleep(0.005)
+                time.sleep(
+                    min(_lock_backoff_s(attempts), max(deadline - time.monotonic(), 0.0))
+                )
+                attempts += 1
 
     def _break_stale_lock(self, lockfile: Path) -> None:
         """Evict a stale lock through a one-winner election: a bare
@@ -479,11 +556,20 @@ class ScheduleCache:
         may have flushed since), merge the local state in, write back
         atomically — all under the lockfile, so no flush loses entries."""
         t_lock0 = time.perf_counter()
-        with obs.span("cache.lock_wait", path=str(self.path)):
-            lockfile = self._acquire_lock()
+        try:
+            with obs.span("cache.lock_wait", path=str(self.path)):
+                lockfile, wait_attempts = self._acquire_lock()
+        except CacheLockTimeout:
+            obs.REGISTRY.observe(
+                "autosage_cache_lock_wait_ms",
+                (time.perf_counter() - t_lock0) * 1e3,
+                outcome="timeout",
+            )
+            raise
         obs.REGISTRY.observe(
             "autosage_cache_lock_wait_ms",
             (time.perf_counter() - t_lock0) * 1e3,
+            outcome="immediate" if wait_attempts == 0 else "waited",
         )
         try:
             t_merge0 = time.perf_counter()

@@ -35,9 +35,9 @@ import jax.numpy as jnp
 
 from repro.core import obs
 from repro.core import probe as probe_mod
-from repro.core import registry, telemetry
+from repro.core import registry, resilience, telemetry
 from repro.core import transfer as transfer_mod
-from repro.core.cache import ScheduleCache
+from repro.core.cache import ReplayMiss, ScheduleCache
 from repro.core.features import InputFeatures, device_sig
 from repro.core.guardrail import apply_guardrail
 from repro.core.scheduler import (
@@ -82,10 +82,21 @@ def decide_attention(
     re-rank under the local roofline skips the end-to-end probe."""
     t0 = time.perf_counter()
     with obs.span("decide", op="attention", f=d, scheduler="exact"):
-        decision, tier = _decide_attention_impl(
-            sage, csr, d, seed=seed, stage_breakdown=stage_breakdown,
-            allow_transfer=allow_transfer,
-        )
+        try:
+            decision, tier = _decide_attention_impl(
+                sage, csr, d, seed=seed, stage_breakdown=stage_breakdown,
+                allow_transfer=allow_transfer,
+            )
+        except ReplayMiss:
+            raise  # the replay contract stays loud — never rescued
+        except Exception as exc:
+            if not resilience.enabled():
+                raise
+            # pipeline-level rescue mirror of AutoSage.decide: a faulting
+            # decision machinery still yields a runnable 3-kernel
+            # baseline decision (uncached — never a poisoned pin)
+            resilience.record_fault("decide", "", "attention", exc)
+            decision, tier = _rescue_attention(sage, csr, d), "fault"
     obs.REGISTRY.inc(
         "autosage_decides_total", op="attention", tier=tier, scheduler="exact"
     )
@@ -94,6 +105,16 @@ def decide_attention(
         op="attention", scheduler="exact",
     )
     return decision
+
+
+def _rescue_attention(sage: AutoSage, csr: CSR, d: int) -> "AttentionDecision":
+    feat = InputFeatures.from_csr(csr, d, "attention")
+    base = registry.baseline(feat, sage.hw)
+    return AttentionDecision(
+        op="attention", choice="baseline", variant=base, guardrail=None,
+        from_cache=False, probe_ms={}, probe_overhead_ms=0.0,
+        probe_iter_ms=0.0, estimates_ms={},
+    )
 
 
 def _decide_attention_impl(
@@ -115,6 +136,18 @@ def _decide_attention_impl(
     by_name["baseline"] = base
 
     cached = sage.cache.get(key) if sage.cache is not None else None
+    if cached is not None and resilience.enabled():
+        choice = cached.get("choice")
+        sage.breaker.maybe_sync()
+        if choice not in (None, "baseline") and sage.breaker.is_quarantined(
+            choice
+        ):
+            if sage.cache.replay_only:
+                raise ReplayMiss(
+                    f"pinned choice {choice!r} for {key} is quarantined "
+                    "(AUTOSAGE_REPLAY_ONLY=1 forbids substituting)"
+                )
+            cached = None  # re-decide without the quarantined pin
     if cached is not None:
         choice = cached["choice"]
         decision = AttentionDecision(
@@ -134,7 +167,7 @@ def _decide_attention_impl(
     ):
         plan = transfer_mod.best_plan(
             sage.cache.peer_entries(key), feat, sage.hw, by_name, base,
-            sage.alpha,
+            sage.alpha, excluded=sage.breaker.excluded_names(),
         )
     if plan is not None and plan.confident:
         decision = AttentionDecision(
@@ -144,7 +177,10 @@ def _decide_attention_impl(
             probe_iter_ms=0.0, estimates_ms=estimates,
             transfer=plan.provenance("confirmed"),
         )
-        sage.cache.put(key, entry_with_stats(decision, feat, base.full_name()))
+        with resilience.cache_guard(op="attention"):
+            sage.cache.put(
+                key, entry_with_stats(decision, feat, base.full_name())
+            )
         obs.REGISTRY.inc("autosage_transfer_verdict_total", verdict="confirmed")
         telemetry.emit_decide_event(decision, feat, kind="transfer")
         telemetry.emit_attention_decision(decision)
@@ -193,7 +229,10 @@ def _decide_attention_impl(
         # staleness per regime through these fields, and the neutral
         # ranking makes the pipeline decision transferable across
         # device classes
-        sage.cache.put(key, entry_with_stats(decision, feat, base.full_name()))
+        with resilience.cache_guard(op="attention"):
+            sage.cache.put(
+                key, entry_with_stats(decision, feat, base.full_name())
+            )
     telemetry.emit_attention_decision(decision)
     return decision, "probe"
 

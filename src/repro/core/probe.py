@@ -55,6 +55,11 @@ def time_callable(
     name: str = "?",
 ) -> ProbeResult:
     """Median wall-clock of fn() with block_until_ready, under a cap."""
+    from repro.core import faultinject
+
+    # chaos hook: "probe::hang" here is what trips the scheduler-side
+    # watchdog; "probe::raise" exercises per-candidate probe sandboxing
+    faultinject.fault_point("probe", name=name)
     # warm-up (compile) — excluded, as in the paper's protocol (§6)
     out = fn()
     jax.block_until_ready(out)

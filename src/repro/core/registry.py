@@ -62,8 +62,9 @@ class Variant:
         ``autosage_prepare_ms{op,variant}`` — layout build time is part
         of the amortized cost story (paper's cache warm-up) and the obs
         flight recorder charges it per variant family."""
-        from repro.core import obs
+        from repro.core import faultinject, obs
 
+        faultinject.fault_point("prepare", name=self.full_name(), op=self.op)
         t0 = time.perf_counter()
         aux = self.prepare(csr, **kwargs)
         obs.REGISTRY.observe(

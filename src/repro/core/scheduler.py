@@ -31,9 +31,10 @@ from repro.core import features as features_mod
 from repro.core import obs
 from repro.core import probe as probe_mod
 from repro.core import registry
+from repro.core import resilience
 from repro.core import telemetry
 from repro.core import transfer as transfer_mod
-from repro.core.cache import ScheduleCache
+from repro.core.cache import ReplayMiss, ScheduleCache
 from repro.core.features import (
     HardwareSpec,
     InputFeatures,
@@ -187,6 +188,11 @@ class AutoSage:
         # unbounded memoization is a memory leak there
         self._runners: Dict[tuple, Callable] = {}
         self._runner_cap = int(os.environ.get("AUTOSAGE_RUNNER_CACHE", "64"))
+        # per-(candidate, device) circuit breaker (core/resilience.py):
+        # exhausted failures quarantine a candidate out of shortlist /
+        # probe / transfer; the blacklist persists through the schedule
+        # cache so fleet workers share it
+        self.breaker = resilience.CircuitBreaker(cache=self.cache)
 
     # ------------------------------------------------------------------
     def probe_candidates(
@@ -241,11 +247,48 @@ class AutoSage:
                     return slope * csr.n_rows  # extrapolated marginal cost
             return times[-1]
 
-        tb = _time(base)
-        probe_ms["baseline"] = tb
+        def _sandboxed_time(v: registry.Variant) -> Optional[float]:
+            """Probe one candidate under a watchdog; a candidate that
+            raises or hangs is excluded from this pass (None) instead of
+            aborting the whole probe, and its failure feeds the breaker.
+            Deliberately NOT written into probe_ms — a fault is not a
+            measurement (and inf does not survive strict JSON)."""
+            name = v.full_name()
+            if not resilience.enabled():
+                return _time(v)
+            try:
+                t = resilience.run_with_timeout(
+                    lambda: _time(v),
+                    resilience.policy_for("probe").timeout_s,
+                    "probe", name=name,
+                )
+                if not v.is_baseline:
+                    self.breaker.record_success(name)
+                return t
+            except Exception as exc:
+                resilience.record_fault("probe", name, v.op, exc)
+                if not v.is_baseline:  # the lifeline is never blacklisted
+                    self.breaker.record_failure(
+                        name, site="probe", op=v.op,
+                        permanent=resilience.classify(exc)
+                        == resilience.PERMANENT,
+                    )
+                return None
+
+        tb = _sandboxed_time(base)
+        if tb is not None:
+            probe_ms["baseline"] = tb
+        else:
+            # a faulting baseline probe must not veto a working
+            # challenger: an infinite reference cost accepts whichever
+            # candidate measured clean (and the run-time fallback chain
+            # still guards the actual execution)
+            tb = float("inf")
         best_name, t_star = None, float("inf")
         for v in shortlist:
-            t = _time(v)
+            t = _sandboxed_time(v)
+            if t is None:
+                continue
             probe_ms[v.full_name()] = t
             if t < t_star:
                 best_name, t_star = v.full_name(), t
@@ -266,7 +309,11 @@ class AutoSage:
             estimates = est.estimates_for(feat, self.hw, cands)
         with obs.span("shortlist", op=feat.op, top_k=self.top_k):
             short = sorted(
-                (v for v in cands if not v.is_baseline),
+                (
+                    v for v in cands
+                    if not v.is_baseline
+                    and not self.breaker.is_excluded(v.full_name())
+                ),
                 key=lambda v: estimates[v.full_name()],
             )[: self.top_k]
         return estimates, short
@@ -297,10 +344,22 @@ class AutoSage:
         """
         t0 = time.perf_counter()
         with obs.span("decide", op=op, f=f, scheduler="exact"):
-            decision, tier = self._decide_impl(
-                csr, f, op, probe_args_fn=probe_args_fn, seed=seed,
-                allow_transfer=allow_transfer,
-            )
+            try:
+                decision, tier = self._decide_impl(
+                    csr, f, op, probe_args_fn=probe_args_fn, seed=seed,
+                    allow_transfer=allow_transfer,
+                )
+            except ReplayMiss:
+                raise  # the replay contract stays loud — never rescued
+            except Exception as exc:
+                if not resilience.enabled():
+                    raise
+                # last-ditch rescue: whatever faulted inside the decision
+                # machinery, a provisional-baseline decision is always
+                # constructible and always runnable (its run path still
+                # has the reference-oracle fallback under it)
+                resilience.record_fault("decide", "", op, exc)
+                decision, tier = self._rescue_decision(csr, f, op), "fault"
         obs.REGISTRY.inc(
             "autosage_decides_total", op=op, tier=tier, scheduler="exact"
         )
@@ -309,6 +368,18 @@ class AutoSage:
             op=op, scheduler="exact",
         )
         return decision
+
+    def _rescue_decision(self, csr: CSR, f: int, op: str) -> Decision:
+        """Provisional baseline decision for the decide-path rescue: not
+        cached (the fault may be environmental and transient), never a
+        poisoned pin."""
+        feat = InputFeatures.from_csr(csr, f, op)
+        base = registry.baseline(feat, self.hw)
+        return Decision(
+            op=op, choice="baseline", variant=base, guardrail=None,
+            from_cache=False, probe_ms={}, probe_overhead_ms=0.0,
+            probe_iter_ms=0.0, estimates_ms={},
+        )
 
     def _decide_impl(
         self,
@@ -331,6 +402,20 @@ class AutoSage:
         by_name["baseline"] = base
 
         cached = self.cache.get(key) if self.cache is not None else None
+        if cached is not None and resilience.enabled():
+            choice = cached.get("choice")
+            self.breaker.maybe_sync()
+            if choice not in (None, "baseline") and self.breaker.is_quarantined(
+                choice
+            ):
+                if self.cache.replay_only:
+                    # the replay contract: a quarantined pin is a MISS,
+                    # loudly — never a silent substitute choice
+                    raise ReplayMiss(
+                        f"pinned choice {choice!r} for {key} is quarantined "
+                        "(AUTOSAGE_REPLAY_ONLY=1 forbids substituting)"
+                    )
+                cached = None  # re-decide without the quarantined pin
         if cached is not None:
             choice = cached["choice"]
             variant = by_name.get(choice, base)
@@ -345,6 +430,10 @@ class AutoSage:
             telemetry.emit_decide_event(decision, feat)
             return decision, "cache"
 
+        if resilience.enabled():
+            # cold path: fold in any quarantines peers persisted since
+            # our last look before shortlisting/transferring
+            self.breaker.maybe_sync()
         estimates, short = self.shortlist(feat, cands)
         plan = None
         if (
@@ -353,7 +442,7 @@ class AutoSage:
         ):
             plan = transfer_mod.best_plan(
                 self.cache.peer_entries(key), feat, self.hw, by_name, base,
-                self.alpha,
+                self.alpha, excluded=self.breaker.excluded_names(),
             )
         if plan is not None and plan.confident:
             decision = Decision(
@@ -364,9 +453,10 @@ class AutoSage:
                 estimates_ms=estimates,
                 transfer=plan.provenance("confirmed"),
             )
-            self.cache.put(
-                key, entry_with_stats(decision, feat, base.full_name())
-            )
+            with resilience.cache_guard(op=op):
+                self.cache.put(
+                    key, entry_with_stats(decision, feat, base.full_name())
+                )
             obs.REGISTRY.inc(
                 "autosage_transfer_verdict_total", verdict="confirmed"
             )
@@ -410,47 +500,92 @@ class AutoSage:
             decision.transfer = plan.provenance(verdict)
             obs.REGISTRY.inc("autosage_transfer_verdict_total", verdict=verdict)
         if self.cache is not None:
-            self.cache.put(
-                key, entry_with_stats(decision, feat, base.full_name())
-            )
+            with resilience.cache_guard(op=op):
+                self.cache.put(
+                    key, entry_with_stats(decision, feat, base.full_name())
+                )
         telemetry.emit_decide_event(decision, feat)
         return decision, "probe"
 
     # ------------------------------------------------------------------
     def build_runner(self, csr: CSR, decision: Decision) -> Callable:
         """Prepare the chosen variant on the FULL graph and return the
-        jitted callable (memoized per graph/op/choice)."""
+        jitted callable (memoized per graph/op/choice). With resilience
+        on, the returned callable is the fallback chain — chosen variant
+        -> xla baseline -> reference oracle — so a choice that raises at
+        prepare or run time degrades instead of crashing the request
+        (core/resilience.py), and its failures feed the breaker."""
         from repro.sparse.csr import graph_signature
 
         key = (graph_signature(csr), decision.op, decision.choice)
         runner = self._runners.pop(key, None)
         if runner is None:
-            # build_runner is reached from inside jit/grad traces (the
-            # custom_vjp fwd/bwd rules in core/autodiff.py decide at
-            # trace time). The prepared layout tables must be CONCRETE
-            # device arrays, not trace-scoped constants — a memoized
-            # runner closing over tracers poisons every later trace.
-            with obs.span(
-                "prepare", op=decision.op, choice=decision.choice
-            ), jax.ensure_compile_time_eval():
-                aux = decision.variant.timed_prepare(csr)
-                runner = decision.variant.build(aux)
-            padding = {
-                k: float(v) for k, v in aux.items()
-                if k.endswith("padding_frac")
-            }
-            if padding:
-                # exact (per-partition) dense-W padding measured by the
-                # block-ELL conversion on the full graph — the audit
-                # counterpart of the feature-estimated padding_waste
-                telemetry.emit_decide_event(
-                    decision, padding=padding, graph_sig=key[0],
-                    kind="prepare",
-                )
+            if resilience.enabled():
+                runner = self._build_chain(csr, decision, graph_sig=key[0])
+            else:
+                runner = self._build_raw(csr, decision, graph_sig=key[0])
             while len(self._runners) >= max(self._runner_cap, 1):
                 self._runners.pop(next(iter(self._runners)))
         self._runners[key] = runner  # (re)insert at MRU position
         return runner
+
+    def _build_raw(
+        self, csr: CSR, decision: Decision, graph_sig: str
+    ) -> Callable:
+        # build_runner is reached from inside jit/grad traces (the
+        # custom_vjp fwd/bwd rules in core/autodiff.py decide at
+        # trace time). The prepared layout tables must be CONCRETE
+        # device arrays, not trace-scoped constants — a memoized
+        # runner closing over tracers poisons every later trace.
+        with obs.span(
+            "prepare", op=decision.op, choice=decision.choice
+        ), jax.ensure_compile_time_eval():
+            aux = decision.variant.timed_prepare(csr)
+            runner = decision.variant.build(aux)
+        padding = {
+            k: float(v) for k, v in aux.items()
+            if k.endswith("padding_frac")
+        }
+        if padding:
+            # exact (per-partition) dense-W padding measured by the
+            # block-ELL conversion on the full graph — the audit
+            # counterpart of the feature-estimated padding_waste
+            telemetry.emit_decide_event(
+                decision, padding=padding, graph_sig=graph_sig,
+                kind="prepare",
+            )
+        return runner
+
+    def _build_chain(
+        self, csr: CSR, decision: Decision, graph_sig: str
+    ) -> Callable:
+        """Fallback-chain runner. Stage 0 (the pinned choice) reuses the
+        raw build — including padding telemetry — so the no-fault path
+        behaves exactly like the unwrapped runner."""
+
+        def build_choice(args):
+            return self._build_raw(csr, decision, graph_sig)
+
+        stages = []
+        if decision.choice != "baseline":
+            stages.append((decision.choice, build_choice, True))
+            stages += resilience.fallback_stages(
+                csr, decision.op, "baseline", None, self.hw
+            )
+        else:
+            # choice IS the baseline: it fronts the chain (with its
+            # padding telemetry), backed only by the oracle
+            stages.append(("baseline", build_choice, True))
+            stages.append(
+                (
+                    "reference",
+                    lambda args: resilience.reference_runner(csr, decision.op),
+                    False,
+                )
+            )
+        return resilience.chain_runner(
+            stages, decision.op, breaker=self.breaker
+        )
 
     def spmm(self, csr: CSR, b, seed: int = 0):
         """Deprecated one-call convenience (paper's autosage::spmm_csr

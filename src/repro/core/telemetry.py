@@ -125,6 +125,21 @@ def emit_batch_event(event: Dict) -> Optional[str]:
     return path
 
 
+def emit_fault_event(event: Dict) -> Optional[str]:
+    """Resilience-layer stream (faults.jsonl): fault/fallback/quarantine/
+    recovery events from core/resilience.py, one record per event —
+    the chaos lane's artifact and obs_cli's provenance source.
+
+    No-op unless AUTOSAGE_TELEMETRY_DIR is set. Returns the path
+    written."""
+    out = os.environ.get("AUTOSAGE_TELEMETRY_DIR")
+    if not out:
+        return None
+    path = str(Path(out) / "faults.jsonl")
+    append_jsonl(path, event)
+    return path
+
+
 def emit_decide_event(
     decision,
     feat=None,

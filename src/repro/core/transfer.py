@@ -162,6 +162,7 @@ def plan_transfer(
     base,
     alpha: float,
     margin: Optional[float] = None,
+    excluded: Optional[set] = None,
 ) -> Optional[TransferPlan]:
     """Re-rank one donor entry's probed candidate set under the local
     roofline. Returns None when the entry has nothing transferable (no
@@ -169,10 +170,14 @@ def plan_transfer(
 
     ``by_name`` maps locally-constructible full variant names to their
     Variant objects (the donor may have probed candidates this process
-    cannot build — those are skipped, and noted in ``plan.skipped``)."""
+    cannot build — those are skipped, and noted in ``plan.skipped``).
+    ``excluded`` names (the circuit breaker's quarantined candidates,
+    core/resilience.py) are treated exactly like unconstructible ones: a
+    peer's pinned choice that faults locally must not be re-imported."""
     from repro.core.cache import parse_key
 
     margin = confirm_margin() if margin is None else margin
+    excluded = excluded or set()
     base_full = base.full_name()
     ranking = ranking_of(entry, base_full)
     if not ranking:
@@ -190,7 +195,7 @@ def plan_transfer(
         if not isinstance(name, str) or not isinstance(probe, (int, float)):
             continue
         variant = base if name == "baseline" else by_name.get(name)
-        if variant is None:
+        if variant is None or (name != "baseline" and name in excluded):
             skipped.append(name)
             continue
         try:
@@ -254,6 +259,7 @@ def best_plan(
     base,
     alpha: float,
     margin: Optional[float] = None,
+    excluded: Optional[set] = None,
 ) -> Optional[TransferPlan]:
     """First workable plan over the donor list (freshest probe first, as
     returned by ScheduleCache.peer_entries)."""
@@ -262,7 +268,8 @@ def best_plan(
             if not isinstance(entry, dict):
                 continue
             plan = plan_transfer(
-                key, entry, feat, hw, by_name, base, alpha, margin=margin
+                key, entry, feat, hw, by_name, base, alpha, margin=margin,
+                excluded=excluded,
             )
             if plan is not None:
                 return plan

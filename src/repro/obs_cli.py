@@ -97,6 +97,9 @@ def explain(
         return "\n".join(lines)
     if not isinstance(entry, dict):
         return f"{key}: foreign (non-dict) entry: {entry!r}"
+    if isinstance(entry.get("quarantine"), dict):
+        # explain called on a quarantine record itself (schema v6)
+        return "\n".join([f"== {key}"] + _fmt_quarantine(entry["quarantine"]))
 
     ck = parse_key(key)
     stats = entry.get("stats") or {}
@@ -162,6 +165,8 @@ def explain(
         for name, ms in sorted(pred.items(), key=lambda kv: kv[1]):
             out.append(f"   predicted {_fmt_ms(ms):>12s}  {name}")
 
+    out += _quarantine_section(data, ck, choice)
+
     out.append("-- live statistics")
     ewma = stats.get("ewma_ms")
     out.append(
@@ -179,6 +184,53 @@ def explain(
     if telemetry_dir:
         out += _history_section(key, ck, Path(telemetry_dir))
     return "\n".join(out)
+
+
+def _fmt_quarantine(rec: Dict[str, Any]) -> List[str]:
+    state = rec.get("state", "?")
+    line = (
+        f"   {rec.get('name', '?')}: {state} "
+        f"(reason={rec.get('reason', '?')}"
+    )
+    if state == "active":
+        line += (
+            f", site={rec.get('site', '?')}, fails={rec.get('fails', '?')}"
+        )
+    line += f", since={rec.get('since')}, ttl_s={rec.get('ttl_s')})"
+    return [line]
+
+
+def _quarantine_section(
+    data: Dict[str, Any], ck, choice: str
+) -> List[str]:
+    """Schema-v6 circuit-breaker provenance: quarantine records written
+    by core/resilience.py under quarantine|<device>|<name> keys, scoped
+    to this entry's device. The pinned choice being quarantined means
+    the fleet serves its fallback chain — and a replay of this entry
+    under AUTOSAGE_REPLAY_ONLY=1 raises ReplayMiss by contract."""
+    device = ck.device if ck is not None else None
+    recs: List[Dict[str, Any]] = []
+    for k, v in data.items():
+        if not (isinstance(k, str) and k.startswith("quarantine|")):
+            continue
+        if not isinstance(v, dict) or not isinstance(v.get("quarantine"), dict):
+            continue
+        rec = v["quarantine"]
+        if device is not None and rec.get("device") not in (None, device):
+            continue
+        recs.append(rec)
+    if not recs:
+        return []
+    out = ["-- quarantine records (circuit breaker, this device)"]
+    for rec in sorted(recs, key=lambda r: r.get("name", "")):
+        out += _fmt_quarantine(rec)
+        if rec.get("name") == choice and rec.get("state") == "active":
+            out.append(
+                "   ^ the PINNED choice is quarantined: decides serve the"
+                " fallback chain; AUTOSAGE_REPLAY_ONLY=1 raises ReplayMiss"
+                " for this entry"
+            )
+    return out
 
 
 def _history_section(key: str, ck, tdir: Path) -> List[str]:

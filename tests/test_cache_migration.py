@@ -176,3 +176,122 @@ def test_v4_entry_is_a_transfer_donor(v4_path, monkeypatch):
     assert plan is not None
     assert plan.source_device == "cpu:fixture:jax0.4"
     assert plan.choice in by_name or plan.choice == "baseline"
+
+
+# ----------------------------------------------------------- v5 -> v6
+# Schema v6 adds circuit-breaker quarantine records (core/resilience.py)
+# under quarantine|<device>|<name> keys. A committed v5 fixture must
+# load, flush and merge losslessly under v6 code, and quarantine keys
+# written by v6 must ride through v5-era semantics (parse_key -> None,
+# peer_entries skips them, merge treats them as ordinary entries).
+
+FIXTURE_V5 = Path(__file__).parent / "fixtures" / "cache_v5.json"
+
+V5_BUCKET = (
+    "bucket|cpu:fixture:jax0.4|r10.z13.s0.d-2.w0.simple|F=16|spmm|a=0.95"
+)
+V5_EXACT = "cpu:fixture:jax0.4|deadbeefcafef00d|F=32|spmm|a=0.95"
+V5_FOREIGN = "future|key|format|v9|unknown|extra"
+
+
+@pytest.fixture
+def v5_path(tmp_path):
+    path = tmp_path / "cache_v5.json"
+    shutil.copy(FIXTURE_V5, path)
+    return str(path)
+
+
+def _v5_data():
+    return json.load(open(FIXTURE_V5))
+
+
+def test_v5_fixture_is_schema_5():
+    data = _v5_data()
+    schemas = {
+        v.get("schema")
+        for k, v in data.items()
+        if isinstance(v, dict) and k != V5_FOREIGN
+    }
+    assert schemas == {5}
+    assert not any(k.startswith("quarantine|") for k in data)
+
+
+def test_v5_load_flush_roundtrip_loses_nothing(v5_path):
+    c = ScheduleCache(path=v5_path)
+    orig = _v5_data()
+    for key, old in orig.items():
+        if key == V5_FOREIGN:
+            continue
+        entry = c.get(key)
+        assert entry["choice"] == old["choice"]
+        assert entry.get("neutral") == old.get("neutral")
+        for field, value in old["stats"].items():
+            assert entry["stats"][field] == value
+    c.put("new-key", {"choice": "dense"})  # eager flush rewrites at v6
+    reloaded = json.load(open(v5_path))
+    assert set(orig) <= set(reloaded)
+    assert reloaded["new-key"]["schema"] == SCHEMA_VERSION
+    assert reloaded[V5_BUCKET]["neutral"]["ranking"]  # transfer donor intact
+
+
+def test_quarantine_records_round_trip_and_merge(v5_path):
+    """Two shared-cache writers each quarantine a candidate; the merged
+    file holds both records, conflicting records on one name resolve
+    last-event-wins (probed_at carries the event time), and v5-style
+    readers treat the keys as foreign (parse_key None, not a peer)."""
+    from repro.core.cache import parse_key as pk
+
+    a = ScheduleCache(path=v5_path, shared=True)
+    b = ScheduleCache(path=v5_path, shared=True)
+    qkey = ScheduleCache.quarantine_key("cpu:fixture:jax0.4", "row_ell")
+    rec_old = {
+        "name": "row_ell", "device": "cpu:fixture:jax0.4",
+        "state": "active", "reason": "3_failures", "since": 100.0,
+        "ttl_s": 60.0,
+    }
+    rec_new = dict(rec_old, state="cleared", reason="recovered", since=200.0)
+    a.put(qkey, {"choice": "row_ell", "quarantine": rec_old,
+                 "stats": {"probed_at": 100.0}})
+    other = ScheduleCache.quarantine_key("cpu:fixture:jax0.4", "hub_split")
+    b.put(other, {"choice": "hub_split",
+                  "quarantine": dict(rec_old, name="hub_split"),
+                  "stats": {"probed_at": 150.0}})
+    b.put(qkey, {"choice": "row_ell", "quarantine": rec_new,
+                 "stats": {"probed_at": 200.0}})
+    a.flush()
+    b.flush()
+
+    final = ScheduleCache(path=v5_path)
+    recs = dict(final.quarantine_records(device="cpu:fixture:jax0.4"))
+    assert set(recs) == {qkey, other}
+    assert recs[qkey]["state"] == "cleared"  # newer event won the merge
+    assert recs[other]["state"] == "active"
+    # v5 reader semantics: quarantine keys are foreign, never donors
+    assert pk(qkey) is None
+    local = V5_BUCKET.replace("cpu:fixture:jax0.4", "elsewhere")
+    assert all(
+        not k.startswith("quarantine|") for k, _ in final.peer_entries(local)
+    )
+    # original v5 decision entries survived both flushes
+    for key, old in _v5_data().items():
+        if isinstance(old, dict) and key != V5_FOREIGN:
+            assert final.get(key)["choice"] == old["choice"]
+
+
+def test_quarantine_readable_in_replay(v5_path):
+    """Replay mode may HONOR the blacklist (read records) but never
+    extend it: puts raise, records load."""
+    c = ScheduleCache(path=v5_path, shared=True)
+    qkey = ScheduleCache.quarantine_key("cpu:fixture:jax0.4", "row_ell")
+    c.put(qkey, {"choice": "row_ell",
+                 "quarantine": {"name": "row_ell",
+                                "device": "cpu:fixture:jax0.4",
+                                "state": "active", "since": 1.0,
+                                "ttl_s": 60.0},
+                 "stats": {"probed_at": 1.0}})
+    c.flush()
+    replay = ScheduleCache(path=v5_path, replay_only=True)
+    recs = replay.quarantine_records(device="cpu:fixture:jax0.4")
+    assert [r["name"] for _, r in recs] == ["row_ell"]
+    with pytest.raises(ReplayMiss):
+        replay.put(qkey, {"choice": "x"})
