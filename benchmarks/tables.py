@@ -33,6 +33,7 @@ from repro.sparse import (
     products_like,
     reddit_like,
     sample_subgraph_stream,
+    single_hub,
 )
 from repro.sparse.csr import CSR
 from repro.sparse.generators import table10_graph
@@ -429,12 +430,14 @@ def batch_smoke(full: bool = False) -> List[Tuple]:
 
 
 def _skew_variants(feat, interpret=True):
-    """One dense-W, one ragged, and the hub-ragged Pallas SpMM variant at
-    the canonical rb=bc=8, f_tile=128 knobs (kernel-level comparison)."""
+    """One dense-W, one ragged, the hub-ragged, and the merge-path Pallas
+    SpMM variant at the canonical rb=bc=8, f_tile=128 knobs (kernel-level
+    comparison; merge-path pinned at tile_slots=8)."""
     picks = {}
     for v in registry._pallas_spmm_variants(feat, interpret=interpret):
         if v.knobs.get("rb") == 8 and v.knobs.get("bc") == 8 \
-                and v.knobs.get("f_tile") == 128:
+                and v.knobs.get("f_tile") == 128 \
+                and v.knobs.get("tile_slots", 8) == 8:
             picks[v.name] = v
     return picks
 
@@ -446,14 +449,19 @@ def skew_stress(full: bool = False) -> List[Tuple]:
     Outputs are checked value-identical (same tiles, same accumulation
     order), so the speedup is pure padding-work elimination. The
     `est_ragged_wins` column confirms the roofline alone would already
-    rank ragged first at that skew — no probe needed."""
+    rank ragged first at that skew — no probe needed. A final all-hub
+    extreme leg (one row owns 90% of nnz, balance >> 64) exercises the
+    merge-path family: merge output must stay bit-identical to ragged,
+    and the roofline must rank merge first there (`est_merge_wins`)."""
     n = 2048 if full else 768
     f = 64
     alphas = (0.0, 0.4, 0.8, 1.2, 1.6, 2.0) if full else (0.0, 0.8, 1.6)
     rng = np.random.default_rng(0)
     rows: List[Tuple] = []
-    for alpha in alphas:
-        csr = power_law(n, alpha, avg_deg=4, seed=int(alpha * 10))
+    legs = [(f"{a:.1f}", power_law(n, a, avg_deg=4, seed=int(a * 10)))
+            for a in alphas]
+    legs.append(("allhub", single_hub(n, nnz_frac=0.9, seed=1)))
+    for label, csr in legs:
         feat = InputFeatures.from_csr(csr, f, "spmm")
         picks = _skew_variants(feat)
         b = jnp.asarray(rng.standard_normal((csr.n_cols, f)).astype(np.float32))
@@ -468,27 +476,41 @@ def skew_stress(full: bool = False) -> List[Tuple]:
             runs[name] = _measure_full(lambda r=runner: r(b), iters=3)
         # identical tiles accumulated in identical order: value-identical
         assert np.array_equal(outs["block_ell_pallas"], outs["ragged_ell_pallas"])
+        if "merge_path_pallas" in outs:
+            assert np.array_equal(outs["ragged_ell_pallas"],
+                                  outs["merge_path_pallas"])
         hw = HardwareSpec.tpu_v5e()
         est_d = est_mod.estimate(feat, hw, "block_ell_pallas",
                                  picks["block_ell_pallas"].knobs)
         est_r = est_mod.estimate(feat, hw, "ragged_ell_pallas",
                                  picks["ragged_ell_pallas"].knobs)
+        est_m = (est_mod.estimate(feat, hw, "merge_path_pallas",
+                                  picks["merge_path_pallas"].knobs)
+                 if "merge_path_pallas" in picks else float("inf"))
+        if label == "allhub":
+            assert est_m < min(est_r, est_d), (est_m, est_r, est_d)
         sp = runs["block_ell_pallas"] / max(runs["ragged_ell_pallas"], 1e-9)
         rows.append((
-            alpha, round(feat.padding_waste, 3), round(t_base, 3),
+            label, round(feat.padding_waste, 3), round(feat.balance(), 1),
+            round(t_base, 3),
             round(runs["block_ell_pallas"], 3),
             round(runs["ragged_ell_pallas"], 3),
             round(runs.get("hub_ragged_pallas", float("nan")), 3),
+            round(runs.get("merge_path_pallas", float("nan")), 3),
             round(sp, 3), "yes" if est_r < est_d else "no",
+            "yes" if est_m < min(est_r, est_d) else "no",
         ))
-        print(f"  [skew] alpha={alpha:.1f} waste={feat.padding_waste:.3f} "
+        print(f"  [skew] leg={label} waste={feat.padding_waste:.3f} "
               f"base={t_base:8.3f}ms denseW={runs['block_ell_pallas']:8.3f}ms "
               f"ragged={runs['ragged_ell_pallas']:8.3f}ms "
-              f"speedup={sp:.3f} est_ragged_wins={est_r < est_d}")
+              f"merge={runs.get('merge_path_pallas', float('nan')):8.3f}ms "
+              f"speedup={sp:.3f} est_ragged_wins={est_r < est_d} "
+              f"est_merge_wins={est_m < min(est_r, est_d)}")
     write_csv(
         f"{OUT}/skew_stress.csv",
-        ["alpha", "padding_waste", "baseline_ms", "dense_w_ms", "ragged_ms",
-         "hub_ragged_ms", "ragged_vs_dense_speedup", "est_ragged_wins"],
+        ["alpha", "padding_waste", "balance", "baseline_ms", "dense_w_ms",
+         "ragged_ms", "hub_ragged_ms", "merge_ms", "ragged_vs_dense_speedup",
+         "est_ragged_wins", "est_merge_wins"],
         rows,
     )
     return rows
@@ -545,6 +567,72 @@ def skew_smoke(full: bool = False) -> List[Tuple]:
               f"decide={choice}")
     write_csv(f"{OUT}/skew_smoke.csv",
               ["regime", "alpha", "padding_waste", "est_ragged_wins",
+               "decide_choice"], rows)
+    return rows
+
+
+def merge_smoke(full: bool = False) -> List[Tuple]:
+    """Seconds-fast merge-path check for CI: on a hub-dominated graph
+    (one row owns 90% of nnz, deg_max/deg_mean >= 64) the roofline alone
+    must rank merge-path first within the Pallas family — no probing —
+    the probe+guardrail decide machinery must agree, and the merge output
+    must be bit-identical to ragged (and allclose vs the CSR oracle). On
+    a uniform graph the row-serialization penalty is zero and ragged must
+    keep its rank (merge never wins on balanced inputs)."""
+    del full
+    f = 64
+    rng = np.random.default_rng(0)
+    rows: List[Tuple] = []
+    sage = _fresh_sage(probe_iters=2, probe_cap_ms=200)
+    hw = HardwareSpec.tpu_v5e()
+    for label, csr in (("uniform", power_law(512, 0.0, avg_deg=4, seed=7)),
+                       ("allhub", single_hub(512, nnz_frac=0.9, seed=3))):
+        feat = InputFeatures.from_csr(csr, f, "spmm")
+        picks = _skew_variants(feat)
+        ragged_v = picks["ragged_ell_pallas"]
+        merge_v = picks["merge_path_pallas"]
+        b = jnp.asarray(rng.standard_normal((csr.n_cols, f)).astype(np.float32))
+        out_r = np.asarray(ragged_v.build(ragged_v.prepare(csr))(b))
+        out_m = np.asarray(merge_v.build(merge_v.prepare(csr))(b))
+        assert np.array_equal(out_r, out_m), "merge must be bit-identical"
+        exp = ref.spmm_ref(jnp.asarray(csr.rowptr), jnp.asarray(csr.colind),
+                           None, b)
+        np.testing.assert_allclose(out_m, np.asarray(exp), rtol=2e-3, atol=2e-3)
+
+        ests = {name: est_mod.estimate(feat, hw, v.name, v.knobs)
+                for name, v in picks.items()}
+        merge_first = ests["merge_path_pallas"] < min(
+            t for name, t in ests.items() if name != "merge_path_pallas"
+        )
+        choice = "-"
+        if label == "allhub":
+            assert feat.balance() >= 64, feat.balance()
+            # the estimate alone must rank merge-path first (no probe)
+            assert merge_first, ests
+            # ...and the probe+guardrail decide machinery must agree,
+            # measured within the Pallas family (ragged as the family
+            # baseline; on CPU both run in interpret mode)
+            outcome = sage.probe_candidates(
+                csr, ragged_v, [merge_v],
+                lambda sub: (jnp.asarray(rng.standard_normal(
+                    (sub.n_cols, f)).astype(np.float32)),),
+            )
+            gr = apply_guardrail(outcome.best_name, outcome.t_best_ms,
+                                 outcome.t_baseline_ms, sage.alpha)
+            assert gr.accepted, gr
+            choice = gr.choice
+        else:
+            assert feat.balance() < 8, feat.balance()
+            # balanced input: no serialization penalty, ragged keeps rank
+            assert ests["ragged_ell_pallas"] <= ests["merge_path_pallas"], ests
+        rows.append((label, round(feat.balance(), 1),
+                     round(feat.padding_waste, 3),
+                     "yes" if merge_first else "no", choice))
+        print(f"  [merge-smoke] {label:8s} balance={feat.balance():.1f} "
+              f"waste={feat.padding_waste:.3f} est_merge_wins={merge_first} "
+              f"decide={choice}")
+    write_csv(f"{OUT}/merge_smoke.csv",
+              ["regime", "balance", "padding_waste", "est_merge_wins",
                "decide_choice"], rows)
     return rows
 
@@ -1421,6 +1509,7 @@ SMOKE_TABLES = {
     "smoke": smoke,
     "batch_smoke": batch_smoke,
     "skew_smoke": skew_smoke,
+    "merge_smoke": merge_smoke,
     "shared_smoke": shared_smoke,
     "portability_smoke": portability_smoke,
     "train_smoke": train_smoke,

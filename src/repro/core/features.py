@@ -208,6 +208,14 @@ class InputFeatures:
         AUTOSAGE_HUB_T overrides)."""
         return int(max(self.deg_p99, 4 * max(self.avg_deg, 1.0)))
 
+    def balance(self) -> float:
+        """Load-imbalance ratio deg_max / deg_mean (>= 1). This is the
+        serialization exposure of row-partitioned kernels: the heaviest
+        row's slot chain runs in ONE grid cell while the mean row bounds
+        the work the other cells got — merge-path's nnz-split removes
+        exactly this term."""
+        return self.deg_max / max(self.avg_deg, 1.0)
+
     # ---- derived block-ELL work estimates (canonical rb=bc=8) --------
     def n_row_blocks8(self) -> int:
         return -(-self.n_rows // 8)
@@ -316,6 +324,11 @@ class ScheduleBucket:
     # of dense-W, so this is the boundary that flips decisions; finer
     # bins would fragment hub-regime subgraph streams into extra probes.
     waste_bin: int = 0
+    # load-imbalance regime (deg_max/deg_mean): 0 (< 16), 1 (< 64),
+    # 2 (>= 64). 64 is where the estimate's serialization penalty makes
+    # merge-path overtake the row-partitioned families, so this is the
+    # other boundary that flips decisions.
+    balance_bin: int = 0
 
     @staticmethod
     def from_features(feat: "InputFeatures", device: Optional[str] = None) -> "ScheduleBucket":
@@ -329,6 +342,7 @@ class ScheduleBucket:
             density_bin=_log10_bin(feat.density),
             dup_edges=feat.dup_edges,
             waste_bin=_waste_bin(feat.padding_waste),
+            balance_bin=balance_bin(feat.balance()),
         )
 
     def sig(self) -> str:
@@ -338,7 +352,7 @@ class ScheduleBucket:
         dup = "dup" if self.dup_edges else "simple"
         return (
             f"r{self.rows_bin}.z{self.nnz_bin}.s{self.skew_bin}"
-            f".d{self.density_bin}.w{self.waste_bin}.{dup}"
+            f".d{self.density_bin}.w{self.waste_bin}.b{self.balance_bin}.{dup}"
         )
 
 
@@ -355,3 +369,17 @@ def waste_bin(waste: float) -> int:
 
 
 _waste_bin = waste_bin  # internal alias kept for older call sites
+
+
+def balance_bin(balance: float) -> int:
+    """Monotone 3-level quantization of deg_max/deg_mean: 0 (< 32),
+    1 (< 256), 2 (>= 256). The lower boundary sits well above the
+    roofline penalty's onset (balance 8) so mild hidden-hub drift within
+    a bucket stays a drift-detection problem, while hub-dominated inputs
+    (merge-path territory, balance >= 64) land in a separate bucket from
+    uniform ones."""
+    if balance >= 256.0:
+        return 2
+    if balance >= 32.0:
+        return 1
+    return 0

@@ -38,6 +38,7 @@ from repro.core.features import (
 from repro.kernels import ref
 from repro.kernels import xla as kx
 from repro.sparse.bsr import block_ell_edge_index, csr_to_block_ell, hub_split
+from repro.sparse.merge import build_merge_path
 from repro.sparse.csr import CSR
 
 
@@ -197,6 +198,15 @@ def _spmm_hub_ragged_jit(n_rows: int, f_tile: int, interpret: bool,
     return out
 
 
+def _merge_panels_fit(n_rows: int, n_cols: int, hw: HardwareSpec) -> bool:
+    """Merge-path VMEM gate: the kernels hold a whole (rows x f_tile)
+    output panel plus a whole (cols x f_tile) operand panel resident at
+    f32; leave half of VMEM for the streamed value tiles and double
+    buffering."""
+    panel_bytes = (n_rows + 8 + n_cols + 8) * 128 * 4
+    return panel_bytes <= hw.vmem_bytes // 2
+
+
 def _pad_b(b: jax.Array, pad_rows: int, pad_f: int) -> jax.Array:
     # hot path: steady-state calls with a known-static F hit pad_f == 0
     # (see _pallas_spmm_variants) and skip the pad op entirely
@@ -285,6 +295,59 @@ def _pallas_spmm_variants(feat: InputFeatures, interpret: bool) -> List[Variant]
                                **({"ragged": True} if ragged else {})},
                     )
                 )
+    # merge-path: nnz-balanced slot tiling (sparse/merge.py); whole B
+    # column panel + whole output panel stay VMEM-resident, so the
+    # variant is gated on panel fit — outside it, the ragged family and
+    # the resilience fallback chain take over
+    for tile_slots in (8, 16):
+        def _prep_merge(csr, tile_slots=tile_slots):
+            bell = csr_to_block_ell(csr, rb=8, bc=8)
+            mp = build_merge_path(bell.to_ragged(), tile_slots=tile_slots)
+            return {
+                "bc": 8,
+                "n_rows": csr.n_rows,
+                "n_col_blocks": mp.n_col_blocks,
+                "padding_frac": bell.padding_frac,
+                "blkptr": mp.blkptr,
+                "slot_colblk": mp.slot_colblk,
+                "tile_rowblk": mp.tile_rowblk,
+                "tile_nslots": mp.tile_nslots,
+                "tile_vals": mp.tile_vals,
+            }
+
+        def _build_merge(aux, interpret=interpret, f_static=f_static):
+            from repro.kernels.spmm_pallas import spmm_merge_path
+
+            dev = _dev(aux)
+            n = int(aux["n_rows"])
+            padded_cols = aux["n_col_blocks"] * aux["bc"]
+            pad_f_static = (-f_static) % 128
+
+            def run(b):
+                f = b.shape[1]
+                pad_f = pad_f_static if f == f_static else (-f) % 128
+                bp = _pad_b(b, padded_cols - b.shape[0], pad_f)
+                o = spmm_merge_path(
+                    dev["blkptr"], dev["slot_colblk"], dev["tile_rowblk"],
+                    dev["tile_nslots"], dev["tile_vals"], bp,
+                    f_tile=128, interpret=interpret,
+                )
+                return o[:n, :f]
+
+            return run
+
+        out.append(
+            Variant(
+                name="merge_path_pallas",
+                op="spmm",
+                prepare=_prep_merge,
+                build=_build_merge,
+                applicable=lambda f, hw: f.f >= 32
+                and _merge_panels_fit(f.n_rows, f.n_cols, hw),
+                knobs={"rb": 8, "bc": 8, "f_tile": 128,
+                       "tile_slots": tile_slots, "ragged": True},
+            )
+        )
     # hub-split x ragged: per-partition slot compaction
     hub_t = int(os.environ.get("AUTOSAGE_HUB_T", feat.hub_threshold()))
 
@@ -467,6 +530,75 @@ def _pallas_spmm_dyn_variants(feat: InputFeatures, interpret: bool) -> List[Vari
                 knobs={"rb": rb, "bc": bc, "f_tile": 128, "ragged": True},
             )
         )
+
+    # merge-path with a per-call value scatter: the runtime cotangent
+    # lands in a flat (padded_slots, rb, bc) table that reshapes into the
+    # merge tiling (the tiling is a pure reshape of the slot stream)
+    def _prep_merge_dyn(csr):
+        s_csr = csr.structural()
+        bell = csr_to_block_ell(s_csr, rb=8, bc=8)
+        rag = bell.to_ragged()
+        mp = build_merge_path(rag, tile_slots=8)
+        idx = block_ell_edge_index(s_csr, bell)
+        return {
+            "n_rows": csr.n_rows,
+            "n_col_blocks": mp.n_col_blocks,
+            "n_tiles": mp.n_tiles,
+            "tile_slots": mp.tile_slots,
+            "padding_frac": bell.padding_frac,
+            "blkptr": mp.blkptr,
+            "slot_colblk": mp.slot_colblk,
+            "tile_rowblk": mp.tile_rowblk,
+            "tile_nslots": mp.tile_nslots,
+            "edge_slot": (
+                rag.blkptr[idx["edge_blkrow"]] + idx["edge_slot"]
+            ).astype(np.int32),
+            "edge_r": idx["edge_r"],
+            "edge_c": idx["edge_c"],
+        }
+
+    def _build_merge_dyn(aux, interpret=interpret, f_static=f_static):
+        from repro.kernels.spmm_pallas import spmm_merge_path
+
+        dev = _dev(aux)
+        n = int(aux["n_rows"])
+        n_tiles = int(aux["n_tiles"])
+        tile_slots = int(aux["tile_slots"])
+        padded_cols = aux["n_col_blocks"] * 8
+        pad_f_static = (-f_static) % 128
+
+        def run(vals, b):
+            f = b.shape[1]
+            pad_f = pad_f_static if f == f_static else (-f) % 128
+            bp = _pad_b(b, padded_cols - b.shape[0], pad_f)
+            tile_vals = (
+                jnp.zeros((n_tiles * tile_slots, 8, 8), jnp.float32)
+                .at[dev["edge_slot"], dev["edge_r"], dev["edge_c"]]
+                .add(vals.astype(jnp.float32))
+                .reshape(n_tiles, tile_slots, 8, 8)
+            )
+            o = spmm_merge_path(
+                dev["blkptr"], dev["slot_colblk"], dev["tile_rowblk"],
+                dev["tile_nslots"], tile_vals, bp,
+                f_tile=128, interpret=interpret,
+            )
+            return o[:n, :f]
+
+        return run
+
+    out.append(
+        Variant(
+            name="merge_path_pallas",
+            op=feat.op,
+            prepare=_prep_merge_dyn,
+            build=_build_merge_dyn,
+            applicable=lambda f, hw: f.f >= 32
+            and f.nnz * 8 * 8 * 4 <= 512_000_000
+            and _merge_panels_fit(f.n_rows, f.n_cols, hw),
+            knobs={"rb": 8, "bc": 8, "f_tile": 128, "tile_slots": 8,
+                   "ragged": True},
+        )
+    )
     return out
 
 
@@ -613,6 +745,73 @@ def _pallas_sddmm_variants(feat: InputFeatures, interpret: bool) -> List[Variant
                            **({"ragged": True} if ragged else {})},
                 )
             )
+
+    # merge-path: nnz-balanced slot tiles; the flat reshape of the tile
+    # output is slot-ordered, so the ragged family's per-edge gather
+    # indices apply unchanged
+    for tile_slots in (8, 16):
+        def _prep_merge(csr, tile_slots=tile_slots):
+            s_csr = CSR(csr.rowptr, csr.colind, None, csr.n_rows, csr.n_cols)
+            bell = csr_to_block_ell(s_csr, rb=8, bc=8)
+            rag = bell.to_ragged()
+            mp = build_merge_path(rag, tile_slots=tile_slots)
+            idx = block_ell_edge_index(s_csr, bell)
+            return {
+                "bc": 8,
+                "padded_rows": mp.padded_rows,
+                "n_col_blocks": mp.n_col_blocks,
+                "n_slots": mp.n_slots,
+                "padding_frac": bell.padding_frac,
+                "blkptr": mp.blkptr,
+                "slot_colblk": mp.slot_colblk,
+                "tile_rowblk": mp.tile_rowblk,
+                "tile_mask": (mp.tile_vals != 0).astype(np.float32),
+                "edge_slot": (
+                    rag.blkptr[idx["edge_blkrow"]] + idx["edge_slot"]
+                ).astype(np.int32),
+                "edge_r": idx["edge_r"],
+                "edge_c": idx["edge_c"],
+            }
+
+        def _build_merge(aux, interpret=interpret, f_static=f_static):
+            from repro.kernels.sddmm_pallas import sddmm_merge_path
+
+            dev = _dev(aux)
+            padded_rows = aux["padded_rows"]
+            padded_cols = aux["n_col_blocks"] * aux["bc"]
+            padded_f_static, chunk_static = _sddmm_chunk(f_static)
+
+            def run(x, y):
+                f = x.shape[1]
+                padded_f, chunk = (
+                    (padded_f_static, chunk_static) if f == f_static
+                    else _sddmm_chunk(f)
+                )
+                xp = _pad_b(x, padded_rows - x.shape[0], padded_f - f)
+                yp = _pad_b(y, padded_cols - y.shape[0], padded_f - f)
+                tiles = sddmm_merge_path(
+                    dev["blkptr"], dev["slot_colblk"], dev["tile_rowblk"],
+                    dev["tile_mask"], xp, yp, f_chunk=chunk,
+                    interpret=interpret,
+                )
+                flat = tiles.reshape(-1, 8, 8)
+                return flat[dev["edge_slot"], dev["edge_r"], dev["edge_c"]]
+
+            return run
+
+        out.append(
+            Variant(
+                name="merge_path_pallas",
+                op="sddmm",
+                prepare=_prep_merge,
+                build=_build_merge,
+                applicable=lambda f, hw: f.f >= 16
+                and f.nnz * 8 * 8 * 4 <= 512_000_000
+                and _merge_panels_fit(f.n_rows, f.n_cols, hw),
+                knobs={"rb": 8, "bc": 8, "tile_slots": tile_slots,
+                       "ragged": True},
+            )
+        )
     return out
 
 

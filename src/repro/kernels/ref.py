@@ -239,6 +239,52 @@ def sddmm_ragged_ell_ref(
     return tiles * mask
 
 
+def spmm_merge_path_ref(
+    blkptr: jax.Array,  # int32 (nrb + 1,)
+    slot_colblk: jax.Array,  # int32 (padded_slots,) tail-padded
+    tile_vals: jax.Array,  # f32 (n_tiles, tile_slots, rb, bc)
+    b: jax.Array,  # (n_col_blocks*bc, F), pre-padded
+    n_slots: int,
+    bc: int,
+) -> jax.Array:
+    """Merge-path SpMM oracle: the tiling is a pure reshape of the ragged
+    slot stream, so the oracle is the ragged oracle on the unpadded
+    slots, with slot row blocks recovered from blkptr."""
+    n_row_blocks = blkptr.shape[0] - 1
+    rb = tile_vals.shape[2]
+    slot_vals = tile_vals.reshape(-1, rb, tile_vals.shape[3])[:n_slots]
+    slot_rowblk = (
+        jnp.searchsorted(
+            blkptr, jnp.arange(n_slots, dtype=blkptr.dtype), side="right"
+        )
+        - 1
+    )
+    return spmm_ragged_ell_ref(
+        slot_rowblk, slot_colblk[:n_slots], slot_vals, b, n_row_blocks, bc
+    )
+
+
+def sddmm_merge_path_ref(
+    blkptr: jax.Array,  # int32 (nrb + 1,)
+    slot_colblk: jax.Array,  # int32 (padded_slots,) tail-padded
+    tile_mask: jax.Array,  # f32 (n_tiles, tile_slots, rb, bc)
+    x: jax.Array,  # (nrb*rb, F)
+    y: jax.Array,  # (n_col_blocks*bc, F)
+    n_slots: int,
+    bc: int,
+) -> jax.Array:
+    """Merge-path SDDMM oracle: ragged oracle over the unpadded slots."""
+    rb = tile_mask.shape[2]
+    mask = tile_mask.reshape(-1, rb, tile_mask.shape[3])[:n_slots]
+    slot_rowblk = (
+        jnp.searchsorted(
+            blkptr, jnp.arange(n_slots, dtype=blkptr.dtype), side="right"
+        )
+        - 1
+    )
+    return sddmm_ragged_ell_ref(slot_rowblk, slot_colblk[:n_slots], mask, x, y, bc)
+
+
 def csr_attention_block_ell_ref(
     colblk: jax.Array,
     mask: jax.Array,

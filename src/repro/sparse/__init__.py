@@ -6,6 +6,7 @@ from repro.sparse.bsr import (
     block_ell_edge_index,
     csr_to_block_ell,
 )
+from repro.sparse.merge import MergePathELL, build_merge_path
 from repro.sparse.generators import (
     erdos_renyi,
     fixed_degree,
@@ -15,6 +16,7 @@ from repro.sparse.generators import (
     products_like,
     regime_shift_stream,
     sample_subgraph_stream,
+    single_hub,
     sliding_window_csr,
 )
 
@@ -27,6 +29,8 @@ __all__ = [
     "RaggedBlockELL",
     "block_ell_edge_index",
     "csr_to_block_ell",
+    "MergePathELL",
+    "build_merge_path",
     "erdos_renyi",
     "fixed_degree",
     "hub_skew",
@@ -35,5 +39,6 @@ __all__ = [
     "products_like",
     "regime_shift_stream",
     "sample_subgraph_stream",
+    "single_hub",
     "sliding_window_csr",
 ]

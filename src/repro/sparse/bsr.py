@@ -26,6 +26,20 @@ import numpy as np
 
 from repro.sparse.csr import CSR
 
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+def _check_int32(what: str, value: int) -> None:
+    """Slot/blkptr arrays are int32 on-device; refuse layouts whose
+    indices would silently wrap instead (paper-scale graphs can hit
+    this through nnz or through n_row_blocks * width padding)."""
+    if value > _INT32_MAX:
+        raise ValueError(
+            f"block-ELL layout overflows int32 indices: {what} = {value} "
+            f"> {_INT32_MAX}; partition the graph (e.g. hub-split / batch "
+            f"subgraphs) or reduce the block size"
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class BlockELL:
@@ -136,6 +150,7 @@ class BlockELL:
         ns_eff = np.maximum(ns, 1)
         blkptr = np.zeros(nrb + 1, np.int64)
         np.cumsum(ns_eff, out=blkptr[1:])
+        _check_int32("ragged slot count (blkptr[-1])", int(blkptr[-1]))
         slot_rowblk = np.repeat(np.arange(nrb, dtype=np.int32), ns_eff)
         if w == 0:  # no stored slots at all: dummy-only layout
             slot_colblk = np.zeros(nrb, np.int32)
@@ -287,6 +302,10 @@ def csr_to_block_ell(
     width = int(nslots.max()) if nslots.size else 0
     width = max(width, min_width)
     width = -(-width // width_multiple) * width_multiple
+    # slot/blkptr index arrays downstream are int32; fail loudly before
+    # allocating a layout whose indices would silently wrap
+    _check_int32("nnz of the row subset", int(total))
+    _check_int32("dense slot grid (n_row_blocks * width)", n_row_blocks * width)
 
     # slot index of each unique pair within its row-block
     order = np.argsort(uniq, kind="stable")  # uniq already sorted; identity

@@ -65,6 +65,29 @@ def hub_skew(
     return _csr_from_degrees(deg, n, rng)
 
 
+def single_hub(
+    n: int = 512,
+    nnz_frac: float = 0.9,
+    base_deg: int = 2,
+    seed: int = 0,
+) -> CSR:
+    """All-hub extreme: one row owns ``nnz_frac`` of the graph's nnz.
+
+    The degenerate end of the skew axis (paper §8.5 stress tests): every
+    row-partitioned kernel serializes the hub row's whole slot chain in
+    one grid cell, while merge-path spreads it over deg/tile_slots cells.
+    ``deg_max/deg_mean`` here is ~n*nnz_frac, far past the balance_bin
+    boundary, so the estimate must rank merge-path first without a probe.
+    """
+    rng = np.random.default_rng(seed)
+    deg = np.full(n, base_deg, dtype=np.int64)
+    light_nnz = int(deg.sum()) - base_deg
+    # duplicate columns within the hub row are fine (values accumulate)
+    hub_deg = int(light_nnz * nnz_frac / max(1.0 - nnz_frac, 1e-6))
+    deg[0] = max(hub_deg, base_deg)
+    return _csr_from_degrees(deg, n, rng)
+
+
 def table10_graph(
     n: int = 20_000, hub_deg: int = 5_000, other_deg: int = 64, seed: int = 0
 ) -> CSR:

@@ -1,0 +1,131 @@
+"""Merge-path partition table: nnz-balanced tiling of a slot stream.
+
+Every other kernel family in this repo is *row-partitioned*: a grid cell
+owns a row block and runs that block's whole slot chain, so one mega-hub
+row serializes a grid cell no matter how the remaining rows are spread.
+Merge-path (Merrill & Garland's CSR SpMV schedule; GNNAdvisor's
+`part_pointers`/`part2Node` neighbor groups are the GNN analogue) splits
+the *nonzero stream* evenly instead: grid cell ``t`` owns slots
+``[t*tile_slots, (t+1)*tile_slots)`` of the RaggedBlockELL slot stream
+regardless of which rows they belong to.
+
+The host precomputes, per tile, the starting (row block, nnz offset)
+merge coordinate; the Pallas kernels scalar-prefetch these plus the
+row-block pointer ``blkptr`` and recover each slot's owning row with a
+small binary search seeded at the tile's start row. Rows that straddle a
+tile boundary are finished by the next tile: the partial row sum the
+earlier tile left in the resident output block is the carry the later
+tile accumulates onto (the carry/fixup pass — see
+kernels/spmm_pallas.py:spmm_merge_path), so accumulation order equals
+slot order and outputs stay bit-identical to the ragged/dense-W kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sparse.bsr import RaggedBlockELL
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class MergePathELL:
+    """nnz-balanced tiling of a RaggedBlockELL slot stream.
+
+    blkptr:      int32[n_row_blocks + 1]   slot range per row block — the
+                                           "rowptr slice" the kernels
+                                           binary-search rows in
+    slot_colblk: int32[n_tiles*tile_slots] column-block id per slot
+                                           (padded slots point at block 0)
+    tile_vals:   f32[n_tiles, tile_slots, rb, bc]  micro-tiles, grouped
+                                           by owning merge tile (padded
+                                           slots are all-zero)
+    tile_rowblk: int32[n_tiles]            merge start coordinate: row
+                                           block owning the tile's first
+                                           slot
+    tile_offset: int32[n_tiles]            merge start coordinate: slot
+                                           offset of the tile's first
+                                           slot *within* that row block
+    tile_nslots: int32[n_tiles]            live (non-padded) slots per
+                                           tile; only the last tile can
+                                           be partial
+    """
+
+    blkptr: np.ndarray
+    slot_colblk: np.ndarray
+    tile_vals: np.ndarray
+    tile_rowblk: np.ndarray
+    tile_offset: np.ndarray
+    tile_nslots: np.ndarray
+    rb: int
+    bc: int
+    tile_slots: int
+    n_rows: int
+    n_cols: int
+    n_slots: int  # live slots (== RaggedBlockELL.n_slots)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.tile_rowblk.shape[0]
+
+    @property
+    def n_row_blocks(self) -> int:
+        return self.blkptr.shape[0] - 1
+
+    @property
+    def n_col_blocks(self) -> int:
+        return -(-self.n_cols // self.bc)
+
+    @property
+    def padded_rows(self) -> int:
+        return self.n_row_blocks * self.rb
+
+
+def build_merge_path(rag: RaggedBlockELL, tile_slots: int = 8) -> MergePathELL:
+    """Partition ``rag``'s slot stream into equal ``tile_slots`` tiles.
+
+    The start coordinates are the merge-path diagonal intersections of
+    the (row, nnz) grid restricted to slot granularity:
+    ``tile_rowblk[t] = searchsorted(blkptr, t*tile_slots, 'right') - 1``
+    and ``tile_offset[t]`` the distance from that row block's first slot.
+    The slot stream itself is only *reshaped* (plus tail padding), so the
+    per-slot values/colblk order — and hence kernel accumulation order —
+    is exactly the ragged layout's.
+    """
+    if tile_slots < 1:
+        raise ValueError(f"tile_slots must be >= 1, got {tile_slots}")
+    n_slots = rag.n_slots
+    n_tiles = -(-n_slots // tile_slots) if n_slots else 0
+    padded_slots = n_tiles * tile_slots
+    if padded_slots > _INT32_MAX:
+        raise ValueError(
+            f"merge-path table overflows int32 indices: {padded_slots} "
+            f"padded slots > {_INT32_MAX}; shrink the graph or partition it"
+        )
+    pad = padded_slots - n_slots
+    colblk = np.pad(rag.slot_colblk, (0, pad)).astype(np.int32)
+    vals = np.pad(
+        rag.slot_vals.astype(np.float32), ((0, pad), (0, 0), (0, 0))
+    ).reshape(n_tiles, tile_slots, rag.rb, rag.bc)
+    starts = np.arange(n_tiles, dtype=np.int64) * tile_slots
+    tile_rowblk = (
+        np.searchsorted(rag.blkptr.astype(np.int64), starts, side="right") - 1
+    ).astype(np.int32)
+    tile_offset = (starts - rag.blkptr[tile_rowblk]).astype(np.int32)
+    tile_nslots = np.minimum(tile_slots, n_slots - starts).astype(np.int32)
+    return MergePathELL(
+        blkptr=rag.blkptr.astype(np.int32),
+        slot_colblk=colblk,
+        tile_vals=vals,
+        tile_rowblk=tile_rowblk,
+        tile_offset=tile_offset,
+        tile_nslots=tile_nslots,
+        rb=rag.rb,
+        bc=rag.bc,
+        tile_slots=tile_slots,
+        n_rows=rag.n_rows,
+        n_cols=rag.n_cols,
+        n_slots=n_slots,
+    )

@@ -22,7 +22,7 @@ import pytest
 
 from repro.core import AutoSage, BatchScheduler, ScheduleCache
 from repro.kernels import ref
-from repro.sparse import hub_skew
+from repro.sparse import hub_skew, single_hub
 
 OPS = ("spmm", "sddmm", "attention")
 SCHEDULERS = ("autosage", "batch", "batch-shared")
@@ -151,3 +151,29 @@ def test_zero_budget_batch_serves_runnable_baseline(op, tmp_path):
         np.asarray(out), np.asarray(oracle), rtol=5e-3, atol=5e-3
     )
     assert bs.stats()["probes_run"] == 0
+
+
+@pytest.mark.parametrize("op", ("spmm", "sddmm"))
+def test_merge_path_in_pool_and_conformant_on_hub_graph(op, monkeypatch):
+    """Merge-path rows: on a hub-dominated input the merge-path family
+    must be in the Pallas candidate pool, and whatever the scheduler
+    then picks, the result still equals the oracle (invariant 1 with the
+    new family in play)."""
+    from repro.core import registry
+    from repro.core.features import HardwareSpec, InputFeatures
+
+    monkeypatch.setenv("AUTOSAGE_PROBE_PALLAS", "1")
+    csr = single_hub(400, nnz_frac=0.9, seed=5)
+    f = 32  # the spmm Pallas pool gates on f >= 32
+    feat = InputFeatures.from_csr(csr, f, op)
+    names = {v.name for v in registry.candidates(feat, HardwareSpec.current())
+             if v.applicable(feat, HardwareSpec.current())}
+    assert "merge_path_pallas" in names, names
+    sched = AutoSage(cache=ScheduleCache(path=None), probe_iters=1,
+                     probe_cap_ms=25, probe_frac=0.25)
+    rng = np.random.default_rng(4)
+    out, d, oracle = _run_op(sched, csr, op, f, rng)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(oracle), rtol=5e-3, atol=5e-3,
+        err_msg=f"{op} chose {d.choice}",
+    )

@@ -290,7 +290,10 @@ def test_registry_ragged_variants_present_and_correct():
     feat = InputFeatures.from_csr(csr, 64, "spmm")
     vs = registry._pallas_spmm_variants(feat, interpret=True)
     names = {v.name for v in vs}
-    assert {"block_ell_pallas", "ragged_ell_pallas", "hub_ragged_pallas"} <= names
+    assert {
+        "block_ell_pallas", "ragged_ell_pallas", "hub_ragged_pallas",
+        "merge_path_pallas",
+    } <= names
     rng = np.random.default_rng(0)
     b = jnp.asarray(rng.standard_normal((csr.n_cols, 64)).astype(np.float32))
     exp = ref.spmm_ref(
@@ -315,7 +318,9 @@ def test_registry_sddmm_pallas_variants_correct():
     y = jnp.asarray(rng.standard_normal((csr.n_cols, 32)).astype(np.float32))
     exp = ref.sddmm_ref(jnp.asarray(csr.rowptr), jnp.asarray(csr.colind), x, y)
     vs = registry._pallas_sddmm_variants(feat, interpret=True)
-    assert {v.name for v in vs} == {"block_ell_pallas", "ragged_ell_pallas"}
+    assert {v.name for v in vs} == {
+        "block_ell_pallas", "ragged_ell_pallas", "merge_path_pallas"
+    }
     for v in vs:
         if v.knobs.get("rb") == 16:
             continue
