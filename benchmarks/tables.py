@@ -1486,6 +1486,170 @@ def chaos_smoke(full: bool = False) -> List[Tuple]:
     return rows
 
 
+# --------------------------------------------------------------- serving
+BENCH_SERVE_JSON = f"{OUT}/BENCH_serve.json"
+
+
+def _write_serve_bench(stats: Dict) -> None:
+    """BENCH_serve.json: machine-readable serving-SLO artifact CI uploads
+    (nightly `serve_stream --full`, smoke lane `serve_smoke`)."""
+    import json
+    from pathlib import Path
+
+    Path(OUT).mkdir(parents=True, exist_ok=True)
+    payload = {k: v for k, v in stats.items() if not k.startswith("_")}
+    with open(BENCH_SERVE_JSON, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+
+
+def _serve_clients(server, stream, f, n_clients):
+    """Stride-partition ``stream`` across ``n_clients`` threads submitting
+    into one server; returns every ServeResult in completion order."""
+    import threading
+
+    results, lock = [], threading.Lock()
+
+    def client(cid: int) -> None:
+        for g in stream[cid::n_clients]:
+            r = server.submit(g, f, "spmm")
+            with lock:
+                results.append(r)
+
+    threads = [
+        threading.Thread(target=client, args=(c,)) for c in range(n_clients)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return results
+
+
+def serve_stream(full: bool = False) -> List[Tuple]:
+    """Online-serving SLO table: concurrent client streams through
+    `GNNServer` (launch/serve.py). Pass 1 is all cold admissions — every
+    request still answers within the decision budget because probes run
+    on the background worker — and pass 2 shows the same buckets served
+    warm after their in-place upgrades. Reports per-tier counts and the
+    p50/p99/max decision latency against AUTOSAGE_SERVE_BUDGET_MS."""
+    from repro.core import obs
+    from repro.launch.serve import run_serve_gnn
+
+    stats = run_serve_gnn(
+        clients=4,
+        requests=128 if full else 48,
+        passes=2,
+        regimes=8 if full else 4,
+        parent_rows=4096 if full else 2048,
+        rows_per_graph=512 if full else 256,
+        think_ms=0.5,
+        quiet=True,
+    )
+    rows: List[Tuple] = [
+        ("requests", stats["requests"], f"clients=4 buckets={stats['buckets']}"),
+        ("tier_warm", stats["by_tier"].get("warm", 0), "-"),
+        ("tier_transfer", stats["by_tier"].get("transfer", 0), "-"),
+        ("tier_provisional", stats["by_tier"].get("provisional", 0),
+         "probe exiled to background worker"),
+        ("tier_cold", stats["by_tier"].get("cold", 0),
+         "inline probe on request path (must be 0)"),
+        ("probe_stalls", stats["stalls"], "-"),
+        ("background_upgrades", stats["upgrades"], "-"),
+        ("p50_ms", round(stats["p50_ms"], 3), "-"),
+        ("p99_ms", round(stats["p99_ms"], 3),
+         f"budget={stats['budget_ms']:.0f}ms"),
+        ("max_ms", round(stats["max_ms"], 3),
+         f"over_budget={stats['over_budget']}"),
+    ]
+    for name, val, note in rows:
+        print(f"  [serve-stream] {name:20s} {val!s:>10s} {note}")
+    for rec in obs.serve_latency_table():
+        print(f"  [serve-stream] bucket {rec['bucket'][:44]:44s} "
+              f"n={rec['requests']:<4d} p50={rec['p50_ms']:.3f}ms "
+              f"p99={rec['p99_ms']:.3f}ms")
+    write_csv(f"{OUT}/serve_stream.csv", ["metric", "value", "note"], rows)
+    _write_serve_bench(stats)
+    return rows
+
+
+def serve_smoke(full: bool = False) -> List[Tuple]:
+    """Seconds-fast serving-SLO gate for CI, enforcing the acceptance
+    contract: zero probe-stalls on the hot path (no warm/transfer/
+    provisional request ever pays an inline probe), p99 decision latency
+    under AUTOSAGE_SERVE_BUDGET_MS, >= 1 cold bucket upgraded in place
+    mid-stream by the background prober (provisional in pass 1, warm in
+    pass 2), and bit-identical replay of the served decision stream
+    under replay-only mode."""
+    del full
+    import tempfile
+
+    from repro.core import obs
+    from repro.launch.serve import GNNServer
+
+    parents = _stream_regimes(2048)[:4]
+    stream = sample_subgraph_stream(parents, 48, rows_per_graph=256, seed=3)
+    f = 16
+    with tempfile.TemporaryDirectory() as tmp, \
+            _env_overlay(AUTOSAGE_SERVE_BUDGET_MS="250"):
+        path = f"{tmp}/cache.json"
+        sage = AutoSage(
+            cache=ScheduleCache(path=path), probe_iters=1, probe_cap_ms=25,
+            probe_frac=0.25,
+        )
+        bs = BatchScheduler(sage, probe_budget_ms=10_000)
+        stalls0 = obs.REGISTRY.total(obs.PROBE_STALLS)
+        server = GNNServer(bs)
+        pass1 = _serve_clients(server, stream, f, n_clients=3)
+        assert server.drain(timeout_s=60.0), "background prober never drained"
+        pass2 = _serve_clients(server, stream, f, n_clients=3)
+        stats = server.close()
+        finals = {r["bucket"]: r["choice"] for r in bs.bucket_stats()}
+
+        # replay: the pinned decision stream serves identically, probe-free
+        replay_bs = BatchScheduler(
+            AutoSage(cache=ScheduleCache(path=path, replay_only=True))
+        )
+        rserver = GNNServer(replay_bs)
+        rres = [rserver.submit(g, f, "spmm") for g in stream]
+        rserver.close(finalize=False)
+
+    rows: List[Tuple] = [
+        ("requests", stats["requests"], f"buckets={stats['buckets']}"),
+        ("pass1_provisional",
+         sum(r.tier == "provisional" for r in pass1), "cold admissions"),
+        ("pass2_warm", sum(r.tier == "warm" for r in pass2),
+         "after background upgrades"),
+        ("probe_stalls", stats["stalls"], "gate: == 0"),
+        ("upgrades", stats["upgrades"], "gate: >= 1"),
+        ("p99_ms", round(stats["p99_ms"], 3),
+         f"gate: < {stats['budget_ms']:.0f}ms"),
+        ("replay_probes", replay_bs.stats()["probes_run"], "gate: == 0"),
+        ("replay_identical",
+         all(r.decision.choice == finals[r.bucket] for r in rres),
+         "gate: True"),
+    ]
+    for name, val, note in rows:
+        print(f"  [serve-smoke] {name:18s} {val!s:>8s} {note}")
+    # artifact first: a failed gate still leaves the numbers for triage
+    write_csv(f"{OUT}/serve_smoke.csv", ["metric", "value", "note"], rows)
+    _write_serve_bench(stats)
+
+    # the acceptance contract
+    assert stats["stalls"] == 0, stats
+    assert obs.REGISTRY.total(obs.PROBE_STALLS) == stalls0, "stall metric moved"
+    assert stats["by_tier"].get("cold", 0) == 0, stats
+    assert stats["p99_ms"] < stats["budget_ms"], stats
+    assert stats["upgrades"] >= 1, stats
+    # >= 1 bucket served provisional mid-stream then warm post-upgrade
+    prov = {r.bucket for r in pass1 if r.tier == "provisional"}
+    warm2 = {r.bucket for r in pass2 if r.tier == "warm"}
+    assert prov & warm2, (prov, warm2)
+    assert replay_bs.stats()["probes_run"] == 0
+    assert all(r.tier == "warm" for r in rres), rres
+    assert all(r.decision.choice == finals[r.bucket] for r in rres)
+    return rows
+
+
 ALL_TABLES = {
     "table2_7_reddit": table_reddit,
     "table3_8_products": table_products,
@@ -1502,6 +1666,7 @@ ALL_TABLES = {
     "portability": portability,
     "train_step": train_step,
     "obs_overhead": obs_overhead,
+    "serve_stream": serve_stream,
 }
 
 # run only via --smoke (CI) or --only <name>; not part of the default sweep
@@ -1515,4 +1680,5 @@ SMOKE_TABLES = {
     "train_smoke": train_smoke,
     "obs_smoke": obs_smoke,
     "chaos_smoke": chaos_smoke,
+    "serve_smoke": serve_smoke,
 }

@@ -1,0 +1,112 @@
+"""Online serving demo: concurrent clients against one `GNNServer`.
+
+Each client thread streams sampled subgraphs (minibatch-style traffic)
+into a shared serving process. Every request is answered within the
+per-request decision budget (`AUTOSAGE_SERVE_BUDGET_MS`, default 50 ms):
+warm-cache and transfer-tier decisions inline, cold buckets served the
+guardrail-safe provisional baseline while a background probe-worker
+thread upgrades them in place — a probe never blocks a request.
+
+    PYTHONPATH=src python examples/serve_clients.py
+    PYTHONPATH=src python examples/serve_clients.py --clients 8 \
+        --requests 128 --budget-ms 25
+
+Warm-start from a fleet-shared cache (probes other processes paid for):
+
+    PYTHONPATH=src python examples/serve_clients.py \
+        --cache fleet_cache.json
+
+Then replay the served decision stream deterministically (no probes,
+unseen buckets raise):
+
+    PYTHONPATH=src python examples/serve_clients.py \
+        --cache fleet_cache.json --replay
+
+Per-bucket p50/p99 latency tables come from `repro.core.obs`
+(AUTOSAGE_OBS=1 additionally drops Prometheus/Perfetto artifacts); see
+docs/ARCHITECTURE.md for the tier semantics.
+"""
+import argparse
+import sys
+import threading
+import time
+
+sys.path.insert(0, "src")
+
+from repro.core import AutoSage, BatchScheduler, ScheduleCache, obs
+from repro.launch.serve import GNNServer
+from repro.sparse import fixed_degree, hub_skew, sample_subgraph_stream
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=64,
+                    help="subgraphs per pass, split across clients")
+    ap.add_argument("--passes", type=int, default=2,
+                    help="pass 1 cold-admits buckets; pass 2 serves warm")
+    ap.add_argument("--f", type=int, default=16)
+    ap.add_argument("--rows", type=int, default=256)
+    ap.add_argument("--budget-ms", type=float, default=None)
+    ap.add_argument("--cache", default=None)
+    ap.add_argument("--replay", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    # four degree regimes + one heavy-tailed: five schedule buckets
+    parents = [fixed_degree(2048, d, seed=args.seed + i)
+               for i, d in enumerate((3, 6, 12, 24))]
+    parents.append(hub_skew(2048, 6, 0.10, 60, seed=args.seed + 4))
+    stream = sample_subgraph_stream(
+        parents, args.requests, rows_per_graph=args.rows, seed=args.seed + 5
+    )
+
+    sage = AutoSage(
+        cache=ScheduleCache(path=args.cache, replay_only=args.replay),
+        probe_iters=1, probe_cap_ms=50, probe_frac=0.25,
+    )
+    server = GNNServer(
+        BatchScheduler(sage, probe_budget_ms=10_000),
+        budget_ms=args.budget_ms,
+    )
+
+    def client(cid: int) -> None:
+        for g in stream[cid::args.clients]:
+            r = server.submit(g, args.f, "spmm")
+            if r.latency_ms > server.budget_ms:
+                print(f"[client {cid}] OVER BUDGET: {r.latency_ms:.2f}ms "
+                      f"tier={r.tier} bucket={r.bucket}")
+            time.sleep(0.001)  # client think time
+
+    for p in range(args.passes):
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(args.clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        print(f"[pass {p + 1}] {len(stream)} requests / "
+              f"{args.clients} clients in {wall * 1e3:.0f}ms")
+        server.drain(timeout_s=60.0)  # let background probes finish
+
+    stats = server.close(finalize=not args.replay)
+    print(f"\nserved {stats['requests']} requests over {stats['buckets']} "
+          f"buckets  budget={stats['budget_ms']:.0f}ms")
+    for tier, n in sorted(stats["by_tier"].items()):
+        print(f"  {tier:12s} {n}")
+    print(f"  p50={stats['p50_ms']:.3f}ms  p99={stats['p99_ms']:.3f}ms  "
+          f"max={stats['max_ms']:.3f}ms")
+    print(f"  stalls={stats['stalls']}  over_budget={stats['over_budget']}  "
+          f"background_upgrades={stats['upgrades']}")
+    print("\nper-bucket latency (heaviest first):")
+    for row in obs.serve_latency_table():
+        tiers = ",".join(f"{t}:{n}" for t, n in row["tiers"].items())
+        print(f"  {row['bucket'][:48]:48s} n={row['requests']:<4d} "
+              f"p50={row['p50_ms']:.3f}ms p99={row['p99_ms']:.3f}ms [{tiers}]")
+    return 0 if stats["stalls"] == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -62,6 +62,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import os
+import threading
 import time
 import zlib
 from typing import Any, Callable, Dict, List, Optional, Union
@@ -115,6 +116,7 @@ class _BucketState:
     has_challengers: bool
     hits: int = 0
     probed: bool = False  # a final (probed or cached) decision exists
+    probing: bool = False  # claimed by an in-flight (background) probe
     decision: Optional[Decision] = None  # None => provisional baseline
     provisional: Optional[Decision] = None
     probe_charge_ms: float = 0.0
@@ -205,14 +207,26 @@ class BatchScheduler:
         self.drift_min_obs = DEFAULT_DRIFT_MIN_OBS
         self.drift_waste_delta = DEFAULT_DRIFT_WASTE_DELTA
         self._device = device_sig()
+        # Serving-tier concurrency (launch/serve.py): request threads
+        # decide under this lock while a background probe worker pumps.
+        # The lock covers only O(feature/estimate) state transitions —
+        # pump() releases it for the actual probe measurement, so a slow
+        # (or fault-injected hung) probe can never stall a decide.
+        self._lock = threading.RLock()
+        # upgrade notification: called (outside the lock) with the probe
+        # event dict every time a bucket's decision upgrades in place —
+        # the serving tier counts/announces background upgrades with it.
+        self.on_upgrade: Optional[Callable[[Dict[str, Any]], None]] = None
+        # per-decide results (last_bucket / last_source /
+        # last_inline_probes) are THREAD-LOCAL: N serving threads decide
+        # concurrently, and each must read back its own request's bucket
+        # and tier, not a neighbour's.
+        self._decide_tls = threading.local()
         self._buckets: Dict[str, _BucketState] = {}
         # observe() routing: keyed by the FULL bucket (sig() alone omits
         # op/F/device, so same-shape buckets for different ops would
         # swallow each other's runtime observations)
         self._by_bucket: Dict[ScheduleBucket, _BucketState] = {}
-        # zero-cost handle for "observe the decide I just made": decide()
-        # already extracted the features, don't pay them again
-        self.last_bucket: Optional[ScheduleBucket] = None
         self.probe_spent_ms = 0.0
         self.trace: List[Dict[str, Any]] = []
         # One accounting path (core/obs.py): every stream counter is a
@@ -247,6 +261,27 @@ class BatchScheduler:
         self._transfer_probe_free = obs.ScopedCounter(
             "autosage_transfer_probe_free_total"
         )
+
+    # per-decide views, thread-local to the deciding thread
+    @property
+    def last_bucket(self) -> Optional[ScheduleBucket]:
+        """Zero-cost handle for "observe the decide I just made": the
+        features were already extracted, don't pay them again."""
+        return getattr(self._decide_tls, "bucket", None)
+
+    @property
+    def last_source(self) -> Optional[str]:
+        """Tier label the calling thread's last decide() served from:
+        "bucket-cache" / "transfer" / "transfer-pending" / "probe" /
+        "drift-pending" / "provisional"."""
+        return getattr(self._decide_tls, "source", None)
+
+    @property
+    def last_inline_probes(self) -> int:
+        """Bucket probes the calling thread's last decide() ran inline
+        (always 0 with auto_pump=False — the serving tier's probe-stall
+        detector reads exactly this)."""
+        return getattr(self._decide_tls, "inline_probes", 0)
 
     # counter views: the names tests/benchmarks read (`bs.transfers`,
     # `bs.drift_flags`, ...) stay plain ints backed by the registry path
@@ -291,49 +326,58 @@ class BatchScheduler:
             key = ScheduleCache.bucket_key(
                 self._device, bucket.sig(), f, op, self.sage.alpha
             )
-            st = self._buckets.get(key)
-            if st is None:
-                if (
-                    self.cache.shared and not self.cache.replay_only
-                    and not self.cache.contains(key)
-                ):
-                    # a fleet peer may have probed this bucket since we
-                    # loaded: one cheap mtime stat before paying a probe.
-                    # Never in replay mode — replay serves the file AS
-                    # LOADED or two replays of one stream could differ
-                    self.cache.maybe_reload()
-                st = self._open_bucket(bucket, key, csr, feat)
-                self._buckets[key] = st
-                self._by_bucket[bucket] = st
-            st.hits += 1
-            st.last_csr, st.last_feat = csr, feat
-            self.last_bucket = bucket
-            self._check_waste_drift(st, feat)
-            self._check_fault_retire(st)
+            with self._lock:
+                st = self._buckets.get(key)
+                if st is None:
+                    if (
+                        self.cache.shared and not self.cache.replay_only
+                        and not self.cache.contains(key)
+                    ):
+                        # a fleet peer may have probed this bucket since we
+                        # loaded: one cheap mtime stat before paying a probe.
+                        # Never in replay mode — replay serves the file AS
+                        # LOADED or two replays of one stream could differ
+                        self.cache.maybe_reload()
+                    st = self._open_bucket(bucket, key, csr, feat)
+                    self._buckets[key] = st
+                    self._by_bucket[bucket] = st
+                st.hits += 1
+                st.last_csr, st.last_feat = csr, feat
+                self._decide_tls.bucket = bucket
+                self._check_waste_drift(st, feat)
+                self._check_fault_retire(st)
+            # probing happens OUTSIDE the state lock: the trainer path
+            # (auto_pump) blocks here by design, while the serving tier
+            # sets auto_pump=False and runs pump() on a background
+            # probe-worker thread instead — a request never waits on one
+            inline_probes = 0
             if self.auto_pump and not self.cache.replay_only:
-                self.pump(self.max_probes_per_decide)
-            d = st.current()
-            if st.probed and st.decision is not None and st.decision.from_cache:
-                source = "bucket-cache"
-            elif (
-                st.probed and st.decision is not None
-                and st.decision.transfer is not None
-                and not st.decision.probe_ms
-            ):
-                # confident cross-device transfer: final, no local probe
-                source = "transfer"
-            elif st.probed:
-                source = "probe"
-            elif st.transferred and st.transfer_verdict == "pending":
-                # transferred choice serving while its confirm probe waits
-                # on the budget
-                source = "transfer-pending"
-            elif st.decision is not None:
-                # flagged bucket awaiting its re-probe: still serves the
-                # last pinned decision, not the provisional baseline
-                source = "drift-pending"
-            else:
-                source = "provisional"
+                inline_probes = self.pump(self.max_probes_per_decide)
+            self._decide_tls.inline_probes = inline_probes
+            with self._lock:
+                d = st.current()
+                if st.probed and st.decision is not None and st.decision.from_cache:
+                    source = "bucket-cache"
+                elif (
+                    st.probed and st.decision is not None
+                    and st.decision.transfer is not None
+                    and not st.decision.probe_ms
+                ):
+                    # confident cross-device transfer: final, no local probe
+                    source = "transfer"
+                elif st.probed:
+                    source = "probe"
+                elif st.transferred and st.transfer_verdict == "pending":
+                    # transferred choice serving while its confirm probe waits
+                    # on the budget
+                    source = "transfer-pending"
+                elif st.decision is not None:
+                    # flagged bucket awaiting its re-probe: still serves the
+                    # last pinned decision, not the provisional baseline
+                    source = "drift-pending"
+                else:
+                    source = "provisional"
+        self._decide_tls.source = source
         wall_ms = (time.perf_counter() - t0) * 1e3
         self._decide_wall_ms += wall_ms
         obs.REGISTRY.observe(
@@ -500,24 +544,39 @@ class BatchScheduler:
 
     # ----------------------------------------------------------- probes
     def pending(self) -> List[_BucketState]:
-        return [s for s in self._buckets.values() if not s.probed]
+        with self._lock:  # decide() may be inserting concurrently
+            return [s for s in self._buckets.values() if not s.probed]
 
     def pump(self, max_probes: Optional[int] = None) -> int:
         """Probe the highest-priority pending buckets while budget
         remains; returns how many bucket probes ran. Decisions upgrade
         in place: later decides on a pumped bucket see its probed
-        choice."""
+        choice.
+
+        Thread-safe: bucket selection happens under the state lock and
+        claims the bucket (``probing``) so concurrent pumpers never
+        double-probe, but the probe itself runs with the lock RELEASED —
+        concurrent decides keep serving the bucket's current (provisional
+        or stale-pinned) decision until the upgrade commits."""
         if self.cache.replay_only:
             return 0
         ran = 0
         while max_probes is None or ran < max_probes:
-            if self.probe_spent_ms >= self.probe_budget_ms:
-                break
-            pend = self.pending()
-            if not pend:
-                break
-            st = max(pend, key=_BucketState.priority)
-            self._probe_bucket(st)
+            with self._lock:
+                if self.probe_spent_ms >= self.probe_budget_ms:
+                    break
+                pend = [
+                    s for s in self._buckets.values()
+                    if not s.probed and not s.probing
+                ]
+                if not pend:
+                    break
+                st = max(pend, key=_BucketState.priority)
+                st.probing = True
+            try:
+                self._probe_bucket(st)
+            finally:
+                st.probing = False
             ran += 1
         return ran
 
@@ -593,8 +652,21 @@ class BatchScheduler:
                         st.transfer_info, verdict=st.transfer_verdict
                     )
                     d.transfer = st.transfer_info
-            st.probed = True
-            st.decision = d
+            with self._lock:
+                st.decision = d
+                st.probe_est_ms = d.probe_ms.get(d.choice)
+                st.waste_at_probe = st.rep_feat.padding_waste
+                # the new probe resets the regime: statistics restart, and
+                # the drift reference re-calibrates from upcoming traffic
+                st.obs, st.ewma_ms = 0, None
+                st.ref_ms, st._first_sum = None, 0.0
+                if was_drift:
+                    st.drift_flagged = False
+                # the decision commits BEFORE probed flips: a concurrent
+                # decide that observes probed=True must also observe the
+                # upgraded decision (the in-place upgrade the serving
+                # tier's background prober relies on)
+                st.probed = True
             if resilience.enabled() and d.choice != "baseline":
                 # the re-probe answered the fault signal: clear the
                 # breaker's consecutive/run-failure counts for the
@@ -602,18 +674,11 @@ class BatchScheduler:
                 # re-flag off a stale count (they re-accrue on the next
                 # real fault)
                 self.sage.breaker.record_success(d.choice)
-            st.probe_est_ms = d.probe_ms.get(d.choice)
-            st.waste_at_probe = st.rep_feat.padding_waste
-            # the new probe resets the regime: statistics restart, and
-            # the drift reference re-calibrates from upcoming traffic
-            st.obs, st.ewma_ms = 0, None
-            st.ref_ms, st._first_sum = None, 0.0
-            if was_drift:
-                st.drift_flagged = False
             self.cache.put(st.key, self._bucket_entry(st, d))
             self._push_stats(st)
-        st.probe_charge_ms = d.probe_overhead_ms  # 0 on an exact-key hit
-        self.probe_spent_ms += st.probe_charge_ms
+        with self._lock:
+            st.probe_charge_ms = d.probe_overhead_ms  # 0 on an exact-key hit
+            self.probe_spent_ms += st.probe_charge_ms
         self._probe_passes.inc(op=st.rep_feat.op)
         flipped = was_drift and old_choice is not None and d.choice != old_choice
         if flipped:
@@ -647,6 +712,13 @@ class BatchScheduler:
                     new_family=_attention_family(d.choice),
                 )
         telemetry.emit_batch_event(event)
+        if self.on_upgrade is not None:
+            # notify outside every lock: the callback may emit telemetry
+            # or bump metrics, and must never be able to deadlock a decide
+            try:
+                self.on_upgrade(dict(event))
+            except Exception:
+                obs.REGISTRY.inc("autosage_serve_upgrade_cb_errors_total")
 
     # ------------------------------------------------- online statistics
     def bucket_of(self, csr: CSR, f: int, op: str) -> ScheduleBucket:
@@ -672,13 +744,14 @@ class BatchScheduler:
         is the exact arithmetic mean (so early drift verdicts do not
         depend on arrival order), after which it decays exponentially
         with beta = 1/window."""
-        if isinstance(bucket, ScheduleBucket):
-            st = self._by_bucket.get(bucket)
-        else:
-            matches = [
-                s for b, s in self._by_bucket.items() if b.sig() == bucket
-            ]
-            st = matches[0] if len(matches) == 1 else None
+        with self._lock:
+            if isinstance(bucket, ScheduleBucket):
+                st = self._by_bucket.get(bucket)
+            else:
+                matches = [
+                    s for b, s in self._by_bucket.items() if b.sig() == bucket
+                ]
+                st = matches[0] if len(matches) == 1 else None
         if st is None or runtime_ms < 0:
             return
         st.obs += 1
@@ -904,8 +977,10 @@ class BatchScheduler:
                 else contextlib.nullcontext()
             )
             with flush_guard:
+                with self._lock:
+                    snapshot = list(self._buckets.values())
                 with self.cache:
-                    for st in self._buckets.values():
+                    for st in snapshot:
                         if not self.cache.contains(st.key):
                             self.cache.put(
                                 st.key, self._bucket_entry(st, st.current())
@@ -957,7 +1032,9 @@ class BatchScheduler:
     def bucket_stats(self) -> List[Dict[str, Any]]:
         """Per-bucket telemetry rows, heaviest traffic first."""
         rows = []
-        for st in sorted(self._buckets.values(), key=lambda s: -s.hits):
+        with self._lock:
+            snapshot = list(self._buckets.values())
+        for st in sorted(snapshot, key=lambda s: -s.hits):
             d = st.current()
             rows.append(
                 {

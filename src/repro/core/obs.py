@@ -209,6 +209,17 @@ class Histogram:
     def mean(self) -> Optional[float]:
         return self.sum / self.count if self.count else None
 
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold ``other`` into this histogram in place (bucket-wise sum);
+        the aggregation step behind cross-label percentile views like
+        `serve_latency_table`."""
+        self.counts = [a + b for a, b in zip(self.counts, other.counts)]
+        self.count += other.count
+        self.sum += other.sum
+        self.vmin = min(self.vmin, other.vmin)
+        self.vmax = max(self.vmax, other.vmax)
+        return self
+
 
 # call sites use literal label kwargs, so the (insertion-ordered) raw
 # items tuple is a stable cache key for the sorted/stringified form —
@@ -489,6 +500,67 @@ def scorecard() -> Dict[str, Dict[str, Any]]:
     return out
 
 
+# -------------------------------------------------------------- serving
+
+# stable metric names for the online serving tier (launch/serve.py):
+#   autosage_serve_requests_total{tier,op}   request count by serving tier
+#   autosage_serve_request_ms{bucket,tier}   per-bucket decision-latency
+#                                            histograms (p50/p99 SLO view)
+#   autosage_probe_stalls_total{tier}        requests that paid a probe
+#                                            inline — must stay 0 for the
+#                                            warm/transfer/provisional
+#                                            tiers (the serve_smoke gate)
+SERVE_REQUESTS = "autosage_serve_requests_total"
+SERVE_REQUEST_MS = "autosage_serve_request_ms"
+PROBE_STALLS = "autosage_probe_stalls_total"
+
+
+def record_serve_request(
+    bucket_sig: str, tier: str, ms: float, op: str = "?"
+) -> None:
+    """Account one served request: tier-labelled counter plus the
+    per-bucket latency histogram the p50/p99 table reads."""
+    REGISTRY.inc(SERVE_REQUESTS, tier=tier, op=op)
+    REGISTRY.observe(SERVE_REQUEST_MS, ms, bucket=bucket_sig, tier=tier)
+
+
+def record_probe_stall(tier: str) -> None:
+    """A request paid a probe inline on the hot path."""
+    REGISTRY.inc(PROBE_STALLS, tier=tier)
+
+
+def serve_latency_table() -> List[Dict[str, Any]]:
+    """Per-bucket request-latency percentiles, heaviest traffic first:
+    one row per bucket aggregated across tiers, with the tier mix the
+    bucket served under (a bucket that upgraded mid-stream shows both
+    "provisional" and "warm")."""
+    by_bucket: Dict[str, Histogram] = {}
+    tiers: Dict[str, Dict[str, int]] = {}
+    for lk, h in REGISTRY.hist_series(SERVE_REQUEST_MS).items():
+        labels = dict(lk)
+        b = labels.get("bucket", "?")
+        agg = by_bucket.get(b)
+        if agg is None:
+            agg = by_bucket[b] = Histogram()
+        agg.merge(h)
+        t = labels.get("tier", "?")
+        tiers.setdefault(b, {})[t] = tiers.get(b, {}).get(t, 0) + h.count
+    rows = []
+    for b, h in sorted(by_bucket.items(), key=lambda kv: -kv[1].count):
+        rows.append(
+            {
+                "bucket": b,
+                "requests": h.count,
+                "p50_ms": h.quantile(0.50),
+                "p95_ms": h.quantile(0.95),
+                "p99_ms": h.quantile(0.99),
+                "max_ms": None if h.count == 0 else h.vmax,
+                "tiers": dict(sorted(tiers.get(b, {}).items())),
+            }
+        )
+    return rows
+
+
 # ------------------------------------------------------- file exporters
 
 
@@ -633,22 +705,20 @@ def summary_text() -> str:
         ("autosage_transfers_total", "transfers"),
         ("autosage_drift_events_total", "drift events"),
         ("autosage_transpose_total", "csr transposes"),
+        (SERVE_REQUESTS, "serve requests"),
+        (PROBE_STALLS, "probe stalls"),
     ):
         total = REGISTRY.total(name)
         if total:
             lines.append(f"  {label:14s} {int(total)}")
     for name in ("autosage_decide_ms", "autosage_probe_ms",
-                 "autosage_cache_lock_wait_ms"):
+                 "autosage_cache_lock_wait_ms", SERVE_REQUEST_MS):
         series = REGISTRY.hist_series(name)
         if not series:
             continue
         agg = Histogram()
         for h in series.values():
-            agg.counts = [a + b for a, b in zip(agg.counts, h.counts)]
-            agg.count += h.count
-            agg.sum += h.sum
-            agg.vmin = min(agg.vmin, h.vmin)
-            agg.vmax = max(agg.vmax, h.vmax)
+            agg.merge(h)
         lines.append(
             f"  {name}: n={agg.count} p50={agg.quantile(0.5):.3f}ms "
             f"p95={agg.quantile(0.95):.3f}ms p99={agg.quantile(0.99):.3f}ms"

@@ -140,6 +140,23 @@ def emit_fault_event(event: Dict) -> Optional[str]:
     return path
 
 
+def emit_serve_event(event: Dict) -> Optional[str]:
+    """Online-serving stream (serve_events.jsonl): per-request records
+    (tier, bucket, decision latency), background-probe bucket upgrades,
+    and end-of-session summaries from the serving tier
+    (launch/serve.py). One line per event, whole-line atomic appends —
+    client threads and the probe worker share the stream.
+
+    No-op unless AUTOSAGE_TELEMETRY_DIR is set — the request hot path
+    must not touch the filesystem by default. Returns the path written."""
+    out = os.environ.get("AUTOSAGE_TELEMETRY_DIR")
+    if not out:
+        return None
+    path = str(Path(out) / "serve_events.jsonl")
+    append_jsonl(path, event)
+    return path
+
+
 def emit_decide_event(
     decision,
     feat=None,

@@ -1,0 +1,112 @@
+"""Documented-system gates: the env-knob reference and the intra-repo
+markdown links must match reality.
+
+Knob consistency is bidirectional: every ``AUTOSAGE_*`` string literal
+read in ``src/`` must appear in docs/KNOBS.md, and every knob named in
+docs/KNOBS.md must still be read somewhere in ``src/`` — docs can
+neither lag the code nor advertise dead knobs. The link checker walks
+README/ROADMAP/docs and fails on any relative link whose target file is
+missing.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+KNOBS_MD = REPO / "docs" / "KNOBS.md"
+
+# a knob read is a *quoted* AUTOSAGE_ string literal: os.environ.get(
+# "AUTOSAGE_X", ...) and the _f("AUTOSAGE_X", default) helpers both
+# match; prose mentions in docstrings and startswith("AUTOSAGE_")
+# prefix checks (no trailing char) both don't.
+_KNOB_READ = re.compile(r"""["'](AUTOSAGE_[A-Z0-9_]+)["']""")
+_KNOB_DOC = re.compile(r"`(AUTOSAGE_[A-Z0-9_]+)")
+
+
+def knobs_in_src():
+    found = {}
+    for p in sorted((REPO / "src").rglob("*.py")):
+        if "__pycache__" in p.parts:
+            continue
+        for m in _KNOB_READ.finditer(p.read_text()):
+            found.setdefault(m.group(1), []).append(str(p.relative_to(REPO)))
+    return found
+
+
+def knobs_in_docs():
+    return set(_KNOB_DOC.findall(KNOBS_MD.read_text()))
+
+
+def test_knobs_md_exists():
+    assert KNOBS_MD.is_file(), "docs/KNOBS.md missing"
+
+
+def test_every_src_knob_is_documented():
+    src, doc = knobs_in_src(), knobs_in_docs()
+    missing = {k: v for k, v in src.items() if k not in doc}
+    assert not missing, (
+        f"env knobs read in src/ but missing from docs/KNOBS.md: {missing}"
+    )
+
+
+def test_every_documented_knob_is_alive():
+    src, doc = knobs_in_src(), knobs_in_docs()
+    dead = sorted(doc - set(src))
+    assert not dead, (
+        f"knobs documented in docs/KNOBS.md but never read in src/: {dead}"
+    )
+
+
+def test_knob_table_rows_are_complete():
+    """Every src knob gets a real table row (| `KNOB` | default | ...),
+    not just a prose mention."""
+    rows = set()
+    for line in KNOBS_MD.read_text().splitlines():
+        m = re.match(r"\|\s*`(AUTOSAGE_[A-Z0-9_]+)`\s*\|", line)
+        if m:
+            cells = [c.strip() for c in line.strip().strip("|").split("|")]
+            assert len(cells) == 5, f"row for {m.group(1)} needs 5 columns"
+            assert all(cells), f"row for {m.group(1)} has empty cells"
+            rows.add(m.group(1))
+    assert set(knobs_in_src()) <= rows, (
+        f"knobs without a table row: {sorted(set(knobs_in_src()) - rows)}"
+    )
+
+
+# --------------------------------------------------------- link checker
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _doc_files():
+    files = [REPO / "README.md", REPO / "ROADMAP.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def _fenced_stripped(text: str) -> str:
+    """Drop fenced code blocks: sample output may contain [x](y) noise."""
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+@pytest.mark.parametrize("md", _doc_files(), ids=lambda p: p.name)
+def test_intra_repo_links_resolve(md):
+    broken = []
+    for target in _LINK.findall(_fenced_stripped(md.read_text())):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (md.parent / rel).resolve()
+        if not resolved.exists():
+            broken.append(target)
+    assert not broken, f"{md.name}: broken intra-repo links: {broken}"
+
+
+def test_readme_links_to_docs():
+    text = (REPO / "README.md").read_text()
+    assert "docs/ARCHITECTURE.md" in text, (
+        "README must cross-link the architecture guide"
+    )
+    assert "docs/KNOBS.md" in text, "README must cross-link the knob reference"

@@ -1,0 +1,217 @@
+"""Online serving tier (launch/serve.py): the non-blocking open-bucket
+contract. A request never pays a probe — cold buckets answer the
+guardrail-safe provisional baseline within the decision budget while the
+background probe-worker upgrades them in place; a fault-injected hung
+probe must not delay any request; provisional answers are bit-identical
+to the baseline oracle; and the served stream replays deterministically.
+"""
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AutoSage, BatchScheduler, ScheduleCache, obs
+from repro.core import faultinject, telemetry
+from repro.core.features import InputFeatures
+from repro.core import registry
+from repro.launch import serve as serve_mod
+from repro.launch.serve import GNNServer
+from repro.sparse import fixed_degree, sample_subgraph_stream
+
+
+@pytest.fixture(autouse=True)
+def _clean(monkeypatch):
+    """Fresh metrics, no injected faults, no ambient serve/telemetry env."""
+    monkeypatch.delenv("AUTOSAGE_SERVE_BUDGET_MS", raising=False)
+    monkeypatch.delenv("AUTOSAGE_TELEMETRY_DIR", raising=False)
+    monkeypatch.delenv("AUTOSAGE_FAULT", raising=False)
+    faultinject.reset()
+    obs.REGISTRY.reset()
+    yield
+    faultinject.reset()
+    obs.REGISTRY.reset()
+    telemetry.close_streams()
+
+
+def _sage(path=None, replay=False):
+    return AutoSage(
+        cache=ScheduleCache(path=path, replay_only=replay), probe_iters=1,
+        probe_cap_ms=25, probe_frac=0.25,
+    )
+
+
+def _server(path=None, replay=False, **kw):
+    return GNNServer(
+        BatchScheduler(_sage(path, replay), probe_budget_ms=10_000), **kw
+    )
+
+
+def _stream(n=12, regimes=2, seed=0):
+    parents = [fixed_degree(1024, d, seed=seed + i)
+               for i, d in enumerate((4, 16)[:regimes])]
+    return sample_subgraph_stream(parents, n, rows_per_graph=192,
+                                  seed=seed + 9)
+
+
+# ----------------------------------------------------- tier semantics
+def test_cold_bucket_serves_provisional_then_upgrades_to_warm():
+    server = _server()
+    stream = _stream(8, regimes=2)
+    first = [server.submit(g, 16) for g in stream]
+    # cold admissions: provisional tier, zero inline probes
+    assert all(r.tier == "provisional" for r in first[:2])
+    assert all(not r.stalled for r in first)
+    assert server.drain(timeout_s=30.0)
+    assert server.upgrades >= 2  # both buckets upgraded in the background
+    second = [server.submit(g, 16) for g in stream]
+    assert all(r.tier == "warm" for r in second)
+    stats = server.close()
+    assert stats["stalls"] == 0
+    assert stats["by_tier"].get("cold", 0) == 0
+
+
+def test_provisional_answer_is_bit_identical_to_baseline_oracle():
+    # no background worker: the bucket stays provisional while we run it
+    server = _server(background_probes=False)
+    g = _stream(1)[0]
+    f = 16
+    r = server.submit(g, f)
+    assert r.tier == "provisional"
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.standard_normal((g.n_cols, f)).astype(np.float32))
+    out = np.asarray(server.run(g, r.decision)(b))
+    feat = InputFeatures.from_csr(g, f, "spmm")
+    base = registry.baseline(feat, server.bs.sage.hw)
+    exp = np.asarray(base.build(base.prepare(g))(b))
+    assert np.array_equal(out, exp)
+    server.close(finalize=False)
+
+
+def test_upgrade_notification_carries_probe_event():
+    server = _server()
+    server.submit(_stream(1)[0], 16)
+    assert server.drain(timeout_s=30.0)
+    server.close()
+    assert server.upgrades >= 1
+    ev = server.upgrade_events[0]
+    assert ev["bucket"] and ev["choice"]
+    assert obs.REGISTRY.total("autosage_serve_upgrades_total") >= 1
+
+
+# ------------------------------------------------- hung-probe SLO test
+def test_hung_probe_never_delays_a_request(monkeypatch):
+    """PR 8's hang injection wedges every probe for 0.4s; with the probe
+    worker owning them, no request may exceed the decision budget."""
+    monkeypatch.setenv("AUTOSAGE_FAULT", "probe::hang:")
+    monkeypatch.setenv("AUTOSAGE_FAULT_HANG_S", "0.4")
+    monkeypatch.setenv("AUTOSAGE_SERVE_BUDGET_MS", "200")
+    faultinject.reset()
+    server = _server()
+    assert server.budget_ms == 200.0
+    stream = _stream(10, regimes=2)
+    results = [server.submit(g, 16) for g in stream]
+    # the worker is mid-hang right now; requests must still be instant
+    assert all(r.latency_ms < server.budget_ms for r in results)
+    assert all(not r.stalled for r in results)
+    assert server.stalls == 0
+    deadline = time.perf_counter() + 30.0
+    while not faultinject.fired() and time.perf_counter() < deadline:
+        time.sleep(0.01)
+    assert sum(faultinject.fired().values()) >= 1  # injection really hit
+    stats = server.close(timeout_s=5.0)
+    assert stats["stalls"] == 0
+    assert obs.REGISTRY.total(obs.PROBE_STALLS) == 0
+
+
+def test_auto_pump_is_forced_off_for_serving():
+    bs = BatchScheduler(_sage(), auto_pump=True)
+    server = GNNServer(bs, background_probes=False)
+    assert bs.auto_pump is False
+    r = server.submit(_stream(1)[0], 16)
+    assert not r.stalled
+    server.close(finalize=False)
+
+
+# ------------------------------------------------------- replay + cache
+def test_served_stream_replays_bit_identically(tmp_path):
+    path = str(tmp_path / "cache.json")
+    stream = _stream(10, regimes=2)
+    server = _server(path)
+    for g in stream:
+        server.submit(g, 16)
+    assert server.drain(timeout_s=30.0)
+    server.close()  # finalize pins every bucket decision
+    finals = {r["bucket"]: r["choice"] for r in server.bs.bucket_stats()}
+
+    replay = _server(path, replay=True)
+    assert replay._worker is None  # replay mode never spawns a prober
+    res = [replay.submit(g, 16) for g in stream]
+    assert replay.bs.stats()["probes_run"] == 0
+    assert all(r.tier == "warm" for r in res)
+    assert all(r.decision.choice == finals[r.bucket] for r in res)
+    replay.close(finalize=False)
+
+
+# ------------------------------------------------- metrics + telemetry
+def test_serve_metrics_and_latency_table():
+    server = _server()
+    stream = _stream(6, regimes=2)
+    for g in stream:
+        server.submit(g, 16)
+    server.drain(timeout_s=30.0)
+    for g in stream:
+        server.submit(g, 16)
+    stats = server.close()
+    assert stats["requests"] == 12
+    assert obs.REGISTRY.total(obs.SERVE_REQUESTS) == 12
+    assert obs.REGISTRY.total(obs.SERVE_REQUESTS, tier="warm") == 6
+    rows = obs.serve_latency_table()
+    assert sum(r["requests"] for r in rows) == 12
+    for r in rows:
+        assert r["p50_ms"] is not None and r["p99_ms"] >= r["p50_ms"] >= 0
+        assert set(r["tiers"]) <= {"warm", "transfer", "provisional", "cold"}
+    # nearest-rank percentiles from the exact per-request latencies
+    assert stats["p50_ms"] <= stats["p95_ms"] <= stats["p99_ms"] <= stats["max_ms"]
+
+
+def test_serve_events_jsonl_stream(monkeypatch, tmp_path):
+    monkeypatch.setenv("AUTOSAGE_TELEMETRY_DIR", str(tmp_path))
+    server = _server()
+    server.submit(_stream(1)[0], 16)
+    server.drain(timeout_s=30.0)
+    server.close()
+    telemetry.close_streams()
+    lines = [json.loads(ln) for ln in
+             (tmp_path / "serve_events.jsonl").read_text().splitlines()]
+    kinds = [ln["event"] for ln in lines]
+    assert "request" in kinds and "upgrade" in kinds and "summary" in kinds
+    req = next(ln for ln in lines if ln["event"] == "request")
+    assert req["tier"] == "provisional" and req["stalled"] is False
+    assert req["latency_ms"] >= 0 and req["budget_ms"] > 0
+    assert all("t_mono" in ln and "device_sig" in ln for ln in lines)
+
+
+def test_serve_events_off_by_default(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    server = _server(background_probes=False)
+    server.submit(_stream(1)[0], 16)
+    server.close(finalize=False)
+    assert not list(tmp_path.rglob("*.jsonl"))
+
+
+# ----------------------------------------------------------------- CLI
+def test_cli_default_subcommand_is_serve_gnn(capsys):
+    rc = serve_mod.main(["--clients", "2", "--requests", "6", "--passes", "1",
+                         "--regimes", "2", "--rows", "128", "--think-ms", "0"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "[serve]" in out and "latency" in out
+
+
+def test_budget_env_knob(monkeypatch):
+    monkeypatch.setenv("AUTOSAGE_SERVE_BUDGET_MS", "123.5")
+    assert serve_mod._budget_ms() == 123.5
+    monkeypatch.setenv("AUTOSAGE_SERVE_BUDGET_MS", "nonsense")
+    assert serve_mod._budget_ms() == serve_mod.DEFAULT_SERVE_BUDGET_MS
